@@ -1,0 +1,36 @@
+"""Shared helpers for the benchmark suite. Every benchmark prints CSV rows
+``name,value,derived`` so ``run.py`` output is machine-readable."""
+from __future__ import annotations
+
+import sys
+import time
+from contextlib import contextmanager
+
+
+def row(name: str, value, derived: str = "") -> None:
+    print(f"{name},{value},{derived}", flush=True)
+
+
+def header(title: str) -> None:
+    print(f"\n# --- {title} ---", flush=True)
+
+
+@contextmanager
+def timed(name: str):
+    t0 = time.perf_counter()
+    yield
+    row(name, f"{(time.perf_counter() - t0) * 1e6:.0f}us")
+
+
+def time_fn(fn, *args, warmup: int = 1, iters: int = 5) -> float:
+    """Median wall time (seconds) of fn(*args) with block_until_ready."""
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]

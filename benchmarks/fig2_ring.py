@@ -1,0 +1,52 @@
+"""Paper Figure 2: normalized token latency over k (rounds per token) on a
+uniform 4-node CPU cluster, sufficient vs insufficient memory."""
+from __future__ import annotations
+
+from repro.core.profiles import (GiB, OS, DeviceProfile, ModelProfile,
+                                 QUANTS)
+from repro.core.simulator import simulate_ring
+
+from .common import header, row
+
+
+def cluster():
+    return [DeviceProfile(name=f"L{i}", os=OS.LINUX, ram_avail=8 * GiB,
+                          cpu_flops={q: 200e9 for q in QUANTS},
+                          cpu_membw=30e9, disk_seq_bps=2e9,
+                          disk_rand_bps=1e9, t_comm=2e-3)
+            for i in range(4)]
+
+
+def model(n_layers, layer_gib):
+    return ModelProfile(
+        name="m", n_layers=n_layers, layer_bytes=layer_gib * GiB,
+        input_bytes=0.25 * GiB, output_bytes=0.25 * GiB, embed_dim=8192,
+        vocab=32000, kv_heads=8, head_dim=128, n_kv=1024,
+        flops_layer={"q4k": 2 * layer_gib * GiB / 0.5625},
+        flops_output={"q4k": 2 * 8192 * 32000})
+
+
+def main() -> None:
+    header("Figure 2: latency vs k (normalized to k=1)")
+    devs = cluster()
+    grids = {
+        "70B(insufficient)": model(80, 0.48),
+        "65B(insufficient)": model(80, 0.45),
+        "45B(sufficient)": model(60, 0.40),
+        "30B(sufficient)": model(60, 0.28),
+    }
+    for name, mp in grids.items():
+        base = None
+        for k in (1, 2, 4, 5):
+            if mp.n_layers % (4 * k):
+                continue
+            w = [mp.n_layers // (4 * k)] * 4
+            lat = simulate_ring(devs, mp, w, [0] * 4).token_latency
+            if base is None:
+                base = lat
+            row(f"fig2/{name}/k={k}", f"{lat / base:.3f}",
+                f"abs_ms={lat * 1e3:.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Paper Figure 8 / A.5: token latency and layer assignment as the device
+pool changes; automated best-subset selection."""
+from __future__ import annotations
+
+from repro.core import cluster, halda
+from repro.core.profiles import paper_table2_cluster, paper_table2_extra
+from repro.core.simulator import simulate_ring
+
+from .common import header, row
+from .paper_models import profile
+
+
+def main() -> None:
+    header("Figure 8 / A.5: device subsets on Llama 3-70B")
+    mp = profile("llama3-70b")
+    all_devs = paper_table2_cluster() + paper_table2_extra()
+    names = [d.name for d in all_devs]
+    subsets = {
+        "D1-D4": [0, 1, 2, 3],
+        "D1-D6": [0, 1, 2, 3, 4, 5],
+        "D2,D3,D5": [1, 2, 4],
+        "D2,D3": [1, 2],
+        "D3": [2],
+    }
+    for label, idx in subsets.items():
+        devs = [all_devs[i] for i in idx]
+        sol = halda.solve(devs, mp)
+        res = simulate_ring(devs, mp, sol.w, sol.n)
+        row(f"fig8/{label}", f"{res.token_latency * 1e3:.0f}",
+            f"w={sol.w} k={sol.k}")
+
+    choice = cluster.select_cluster(all_devs, mp)
+    row("fig8/auto-selected", f"{choice.solution.latency * 1e3:.0f}",
+        "devices=" + "+".join(names[i] for i in choice.devices))
+
+
+if __name__ == "__main__":
+    main()

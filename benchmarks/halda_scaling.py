@@ -1,0 +1,49 @@
+"""Halda solve-time scaling over cluster size M (complexity check:
+polynomial, sub-second for realistic M)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import halda
+from repro.core.profiles import GiB, OS, DeviceProfile, ModelProfile, QUANTS
+
+from .common import header, row
+
+
+def rand_cluster(m, seed=0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(m):
+        vram = float(rng.choice([0, 4, 8])) * GiB
+        out.append(DeviceProfile(
+            name=f"d{i}", os=OS.LINUX, ram_avail=float(
+                rng.uniform(2, 16)) * GiB,
+            vram_avail=vram, has_cuda=vram > 0,
+            cpu_flops={q: float(rng.uniform(5e10, 4e11)) for q in QUANTS},
+            gpu_flops={q: 2e12 for q in QUANTS} if vram else {},
+            cpu_membw=30e9, gpu_membw=400e9 if vram else 0.0,
+            disk_seq_bps=float(rng.uniform(0.5e9, 4e9)),
+            disk_rand_bps=1e9, t_comm=2e-3))
+    return out
+
+
+def main() -> None:
+    header("Halda scaling: solve time vs M")
+    mp = ModelProfile(
+        name="m", n_layers=80, layer_bytes=0.48 * GiB,
+        input_bytes=0.25 * GiB, output_bytes=0.25 * GiB, embed_dim=8192,
+        vocab=32000, kv_heads=8, head_dim=128, n_kv=1024,
+        flops_layer={"q4k": 1.7e9}, flops_output={"q4k": 5.2e8})
+    for m in (2, 4, 6, 8, 12, 16):
+        devs = rand_cluster(m)
+        t0 = time.perf_counter()
+        sol = halda.solve(devs, mp)
+        dt = time.perf_counter() - t0
+        row(f"halda/M={m}", f"{dt * 1e3:.0f}ms",
+            f"lat={sol.latency * 1e3:.0f}ms k={sol.k}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Kernel micro-benchmarks.
+
+On this CPU container the Pallas kernels execute in interpret mode
+(correctness only — not timing-representative), so the timed numbers are
+the jit'd pure-jnp references (real CPU work, honest relative trends) plus
+static VMEM-working-set accounting for the TPU BlockSpecs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.quant import quantize_q4
+
+from .common import header, row, time_fn
+
+
+def main() -> None:
+    header("kernel micro (jnp reference timings on CPU + VMEM accounting)")
+    key = jax.random.PRNGKey(0)
+
+    # q4 matmul
+    M, K, N = 256, 2048, 2048
+    x = jax.random.normal(key, (M, K))
+    w = jax.random.normal(jax.random.PRNGKey(1), (K, N))
+    qt = quantize_q4(w)
+    f = jax.jit(lambda a, p, s: ref.q4_matmul_ref(a, p, s))
+    dt = time_fn(f, x, qt.packed, qt.scale)
+    row("kernel/q4_matmul_ref", f"{dt * 1e6:.0f}us",
+        f"{2 * M * K * N / dt / 1e9:.1f}GFLOP/s(cpu)")
+    bm, bn, bk = 256, 512, 256
+    vmem = bm * bk * 2 + bk * bn // 2 + (bk // 64) * bn * 2 + bm * bn * 4
+    row("kernel/q4_matmul_vmem", f"{vmem / 1024:.0f}KiB",
+        f"blocks=({bm},{bn},{bk}) fits 16MiB VMEM")
+
+    # flash decode
+    B, H, hkv, D, S = 8, 32, 8, 128, 4096
+    q = jax.random.normal(key, (B, H, D), jnp.bfloat16)
+    k = jax.random.normal(jax.random.PRNGKey(2), (B, S, hkv, D),
+                          jnp.bfloat16)
+    v = jax.random.normal(jax.random.PRNGKey(3), (B, S, hkv, D),
+                          jnp.bfloat16)
+    kv_len = jnp.full((B,), S, jnp.int32)
+    f = jax.jit(lambda *a: ref.flash_decode_ref(*a))
+    dt = time_fn(f, q, k, v, kv_len)
+    row("kernel/flash_decode_ref", f"{dt * 1e6:.0f}us",
+        f"{4 * B * H * D * S / dt / 1e9:.1f}GFLOP/s(cpu)")
+    bs, n_rep = 512, 4
+    vmem = 2 * bs * D * 2 + n_rep * D * 2 + n_rep * D * 4
+    row("kernel/flash_decode_vmem", f"{vmem / 1024:.0f}KiB",
+        f"block_s={bs}")
+
+    # ssd scan
+    Bs, S2, nh, P, Nd = 4, 2048, 8, 64, 128
+    xs = jax.random.normal(key, (Bs, S2, nh, P)) * 0.5
+    dt_in = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(4),
+                                              (Bs, S2, nh)))
+    A = -jnp.exp(jax.random.normal(jax.random.PRNGKey(5), (nh,)) * 0.3)
+    Bm = jax.random.normal(jax.random.PRNGKey(6), (Bs, S2, Nd)) * 0.3
+    Cm = jax.random.normal(jax.random.PRNGKey(7), (Bs, S2, Nd)) * 0.3
+    f = jax.jit(lambda *a: ref.ssd_scan_ref(*a)[0])
+    dt = time_fn(f, xs, dt_in, A, Bm, Cm)
+    row("kernel/ssd_scan_ref", f"{dt * 1e6:.0f}us",
+        f"chunked jnp, S={S2}")
+    ck = 128
+    vmem = (ck * P + 2 * ck * Nd + ck * ck + P * Nd) * 4
+    row("kernel/ssd_scan_vmem", f"{vmem / 1024:.0f}KiB", f"chunk={ck}")
+
+
+if __name__ == "__main__":
+    main()

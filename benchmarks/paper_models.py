@@ -1,0 +1,30 @@
+"""ModelProfiles for the paper's own experiment grid (Tables 3/4/6)."""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.core.profiles import ModelProfile, profile_from_config
+
+#: Table 3 rows: paper label -> config id
+TABLE3 = [
+    ("Llama 3-8B", "llama3-8b"),
+    ("Llama 3-14B", "llama3-14b"),
+    ("Llama 1-30B", "llama1-30b"),
+    ("Llama 3-45B", "llama3-45b"),
+    ("Llama 3-60B", "llama3-60b"),
+    ("Llama 1-65B", "llama1-65b"),
+    ("Llama 3-70B", "llama3-70b"),
+]
+
+#: Table 6 rows (Qwen / QwQ / DeepSeek-R1 distills): reuse matching
+#: architectures from the assigned pool + Llama bases for the distills.
+TABLE6 = [
+    ("Qwen-2.5-14B", "qwen2.5-14b"),
+    ("DeepSeek-R1-Distill-Llama-8B", "llama3-8b"),
+    ("Qwen-2.5/QwQ-32B", "qwen1.5-32b"),
+    ("DeepSeek-R1-Distill-Llama-70B", "llama3-70b"),
+]
+
+
+def profile(config_id: str, n_kv: int = 1024) -> ModelProfile:
+    return profile_from_config(get_config(config_id), n_kv=n_kv,
+                               quant="q4k")

@@ -1,0 +1,248 @@
+"""Roofline analysis (deliverable g).
+
+For every (arch × shape) cell on the single-pod mesh, derive the three
+roofline terms:
+
+  compute    = FLOPs_per_chip / 197 TF/s      (bf16 peak, v5e)
+  memory     = HBM_bytes_per_chip / 819 GB/s
+  collective = collective_bytes_per_chip / 50 GB/s (ICI)
+
+Methodology (documented per instructions):
+  * compute & memory are ANALYTIC, derived from the exact parallel plan
+    the dry-run compiled (sharding factors, ring geometry, microbatching)
+    — XLA's ``cost_analysis`` counts while/scan bodies once and its
+    ``bytes accessed`` applies no fusion discount, so the compiled numbers
+    are recorded as cross-checks (``hlo`` columns, × known trip counts)
+    rather than used directly.
+  * collective bytes come from the optimized-HLO op histogram (per-
+    partition result bytes — exact for the ops XLA actually emitted),
+    nested ops multiplied by the loop trip count (all our collectives sit
+    at layer/ring-step level, never inside the attention inner loops).
+  * MODEL_FLOPS uses the 6·N·D / 2·N·D convention (MoE: N_active);
+    the quadratic attention term is accounted separately; ``frac`` =
+    MODEL_FLOPS-time / dominant-term-time.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import Any, Dict, Optional
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import SHAPES, get_config  # noqa: E402
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16  # noqa: E402
+
+from .common import header, row  # noqa: E402
+
+CHIPS = 256
+TP = 16
+STAGES = 16
+MICRO = 32          # train microbatch used by the sweep
+ACT_TOUCHES = 12    # activation tensor read+writes per layer (fwd)
+
+
+def model_flops(cfg, shape) -> float:
+    N = cfg.total_active_params()
+    if shape.kind == "train":
+        return 6.0 * N * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * N * shape.global_batch * shape.seq_len
+    return 2.0 * N * shape.global_batch
+
+
+def attn_flops(cfg, shape) -> float:
+    if cfg.kv_heads == 0:
+        return 0.0
+    n_attn = sum(1 for k in cfg.layer_kinds() if k == "attn")
+    n_attn += cfg.n_enc_layers * 2          # whisper enc + cross
+    H, hd = cfg.n_heads, cfg.head_dim
+    B, S = shape.global_batch, shape.seq_len
+    win = cfg.attn_window or S
+    if shape.kind in ("train", "prefill"):
+        ctx = min(win, S)
+        fwd = n_attn * 4.0 * B * H * hd * S * ctx / 2.0
+        return 3.0 * fwd if shape.kind == "train" else fwd
+    return n_attn * 4.0 * B * H * hd * min(win, S)
+
+
+def _param_bytes(cfg, bytes_per_param=2.0) -> float:
+    return cfg.total_params() * bytes_per_param
+
+
+def _attn_share(cfg) -> float:
+    """Fraction of per-layer weights that the ring replicates across TP
+    (attention/SSD mixer weights)."""
+    kinds = cfg.layer_kinds()
+    mix = sum(cfg.mixer_params(k) for k in kinds)
+    total = cfg.params_per_layer() * cfg.n_layers
+    return min(mix / max(total, 1), 1.0)
+
+
+def kv_cache_bytes(cfg, shape) -> float:
+    """Global cache bytes at the cell's context length."""
+    B = shape.global_batch
+    S = min(shape.seq_len, cfg.attn_window or shape.seq_len,
+            cfg.max_decode_len or shape.seq_len)
+    if cfg.family == "ssm":
+        di, N, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_head_dim
+        return cfg.n_layers * B * (di // P) * P * N * 2.0
+    if cfg.mla:
+        return cfg.n_layers * B * S * (cfg.kv_lora_rank
+                                       + cfg.qk_rope_dim) * 2.0
+    per_tok = 2 * cfg.kv_heads * cfg.head_dim
+    bpe = 1.25 if cfg.kv_dtype == "int8" else 2.0
+    n_attn = sum(1 for k in cfg.layer_kinds() if k == "attn")
+    kv = n_attn * B * S * per_tok * bpe
+    if cfg.family == "hybrid":
+        n_rec = sum(1 for k in cfg.layer_kinds() if k == "rglru")
+        kv += n_rec * B * (cfg.lru_width or cfg.d_model) * 2.0
+    return kv
+
+
+def analytic_terms(cfg, shape, rec) -> Dict[str, float]:
+    """Per-chip (flops, hbm_bytes) for the compiled plan."""
+    B, S = shape.global_batch, shape.seq_len
+    mf = model_flops(cfg, shape) + attn_flops(cfg, shape)
+    pb = _param_bytes(cfg)
+    act_unit = 2.0 * cfg.d_model * cfg.n_layers * ACT_TOUCHES  # per token
+
+    if shape.kind == "train":
+        n_micro = max(B // MICRO, 1)
+        # MoE capacity: dispatched rows vs active rows
+        waste = 1.0
+        if cfg.n_experts:
+            waste = 1.25  # capacity factor
+        flops_chip = mf * waste / CHIPS
+        weights = 3.0 * n_micro * pb / TP           # fwd+recompute+bwd
+        acts = 3.0 * B * S * act_unit / CHIPS
+        logits = 3.0 * B * S * cfg.vocab * 4.0 / CHIPS
+        opt = 3.0 * (pb / 2.0) * 4.0 * 3.0 / CHIPS  # adam moments rw (f32)
+        bytes_chip = weights + acts + logits + opt
+    elif shape.kind == "prefill":
+        flops_chip = mf / CHIPS
+        weights = pb / TP
+        acts = B * S * act_unit / CHIPS
+        cache = kv_cache_bytes(cfg, shape) / CHIPS
+        bytes_chip = weights + acts + cache
+    else:  # decode
+        flops_chip = mf / CHIPS
+        if rec.get("ring"):
+            share = _attn_share(cfg)
+            wq = rec.get("weight_bytes_per_param", 2.0)
+            # stage holds L/M layers (mixer replicated over TP, FFN /TP)
+            # and re-reads them from HBM once per microbatch (M microbatches
+            # circulate per token) — the ring's weight-locality trade-off.
+            weights = (pb / 2.0 * wq / STAGES) \
+                * (share + (1 - share) / TP) * STAGES \
+                + 2.0 * cfg.vocab * cfg.d_model * 2.0 / TP
+            cache = kv_cache_bytes(cfg, shape) / STAGES / \
+                (TP if cfg.family != "ssm" else 1)
+        else:
+            weights = pb / TP
+            cache = kv_cache_bytes(cfg, shape) / CHIPS
+        bytes_chip = weights + cache + B * act_unit / CHIPS
+    return {"flops_chip": flops_chip, "bytes_chip": bytes_chip}
+
+
+def trips(rec) -> int:
+    cfg = get_config(rec["arch"])
+    if rec.get("ring"):
+        return rec["ring"]["n_steps"]
+    if rec["kind"] == "train":
+        n_micro = max(SHAPES[rec["shape"]].global_batch // MICRO, 1)
+        return cfg.n_layers * n_micro
+    return cfg.n_layers
+
+
+def collective_bytes(rec) -> float:
+    t = trips(rec)
+    total = 0.0
+    for op, h in rec.get("collectives", {}).items():
+        total += h["bytes"] * (t if op.endswith("@nested") else 1)
+    return total
+
+
+def analyse(rec) -> Optional[Dict[str, Any]]:
+    if not rec.get("ok"):
+        return None
+    cfg = get_config(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    at = analytic_terms(cfg, shape, rec)
+    t = trips(rec)
+    coll_chip = collective_bytes(rec)
+    mf = model_flops(cfg, shape)
+    af = attn_flops(cfg, shape)
+
+    t_compute = at["flops_chip"] / PEAK_FLOPS_BF16
+    t_memory = at["bytes_chip"] / HBM_BW
+    t_coll = coll_chip / ICI_BW
+    t_model = (mf + af) / CHIPS / PEAK_FLOPS_BF16
+    dom = max(("compute", t_compute), ("memory", t_memory),
+              ("collective", t_coll), key=lambda kv: kv[1])
+    frac = t_model / dom[1] if dom[1] > 0 else float("nan")
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "path": rec["path"],
+        "t_compute": t_compute, "t_memory": t_memory,
+        "t_collective": t_coll, "dominant": dom[0],
+        "model_flops": mf, "attn_flops": af, "trips": t,
+        "hlo_flops_chip": rec["cost"].get("flops", 0.0) * t,
+        "hlo_bytes_chip": rec["cost"].get("bytes accessed", 0.0) * t,
+        "useful_ratio": (mf + af) / CHIPS / max(at["flops_chip"], 1e-9),
+        "frac": frac,
+        "mem_gib": {k: (v or 0) / 2**30
+                    for k, v in rec.get("memory", {}).items()
+                    if isinstance(v, (int, float))},
+    }
+
+
+def load(path="dryrun_results.json"):
+    for cand in (path, os.path.join(os.path.dirname(__file__), "..", path)):
+        if os.path.exists(cand):
+            with open(cand) as f:
+                return json.load(f)
+    raise FileNotFoundError(path)
+
+
+def main(out_md: Optional[str] = None, path: str = "dryrun_results.json"
+         ) -> list:
+    header("Roofline (single-pod 16x16, per-chip seconds per step)")
+    recs = load(path)
+    rows = []
+    for rec in recs:
+        if rec.get("mesh_kind") != "single":
+            continue
+        a = analyse(rec)
+        if a is None:
+            row(f"roofline/{rec['arch']}/{rec['shape']}", "FAILED",
+                rec.get("error", ""))
+            continue
+        rows.append(a)
+        row(f"roofline/{a['arch']}/{a['shape']}",
+            f"{a['frac']:.3f}",
+            f"dom={a['dominant']} comp={a['t_compute']:.2e}s "
+            f"mem={a['t_memory']:.2e}s coll={a['t_collective']:.2e}s "
+            f"useful={a['useful_ratio']:.2f} path={a['path']}")
+
+    if out_md:
+        with open(out_md, "w") as f:
+            f.write("| arch | shape | path | compute (s) | memory (s) | "
+                    "collective (s) | dominant | frac | HBM GiB "
+                    "(arg+tmp) |\n")
+            f.write("|---|---|---|---|---|---|---|---|---|\n")
+            for a in rows:
+                mg = a["mem_gib"]
+                hbm = (mg.get("argument_bytes", 0)
+                       + mg.get("temp_bytes", 0))
+                f.write(
+                    f"| {a['arch']} | {a['shape']} | {a['path']} "
+                    f"| {a['t_compute']:.2e} | {a['t_memory']:.2e} "
+                    f"| {a['t_collective']:.2e} | {a['dominant']} "
+                    f"| {a['frac']:.3f} | {hbm:.1f} |\n")
+        print(f"wrote {out_md}")
+    return rows
+
+
+if __name__ == "__main__":
+    main(out_md=sys.argv[1] if len(sys.argv) > 1 else None)

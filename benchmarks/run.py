@@ -1,0 +1,53 @@
+"""Benchmark orchestrator: one section per paper table/figure + roofline.
+
+  PYTHONPATH=src python -m benchmarks.run           # everything
+  PYTHONPATH=src python -m benchmarks.run table3    # one section
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+SECTIONS = ("table3", "table4", "table6", "fig2", "fig8", "halda",
+            "kernels", "roofline")
+
+
+def main(argv=None) -> int:
+    args = (argv if argv is not None else sys.argv[1:])
+    wanted = set(args) if args else set(SECTIONS)
+
+    if "table3" in wanted:
+        from . import table3_latency
+        table3_latency.main()
+    if "table4" in wanted:
+        from . import table4_memory
+        table4_memory.main()
+    if "table6" in wanted:
+        from . import table6_models
+        table6_models.main()
+    if "fig2" in wanted:
+        from . import fig2_ring
+        fig2_ring.main()
+    if "fig8" in wanted:
+        from . import fig8_devices
+        fig8_devices.main()
+    if "halda" in wanted:
+        from . import halda_scaling
+        halda_scaling.main()
+    if "kernels" in wanted:
+        from . import kernel_micro
+        kernel_micro.main()
+    if "roofline" in wanted:
+        from . import roofline
+        try:
+            roofline.main()
+        except FileNotFoundError:
+            print("roofline: dryrun_results.json not found — run "
+                  "`python -m repro.launch.dryrun --all` first")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,31 @@
+"""Paper Table 6 (Appendix A.4): hot models beyond Llama."""
+from __future__ import annotations
+
+from repro.core import baselines, halda
+from repro.core.profiles import paper_table2_cluster
+from repro.core.simulator import simulate_ring
+
+from .common import header, row
+from .paper_models import TABLE6, profile
+
+
+def main() -> None:
+    header("Table 6: Qwen / QwQ / R1-distill latency (ms/token)")
+    devs = paper_table2_cluster()
+    for label, cid in TABLE6:
+        mp = profile(cid)
+        sol = halda.solve(devs, mp)
+        res = simulate_ring(devs, mp, sol.w, sol.n)
+        base = baselines.llama_cpp(devs, mp)
+        active = [i for i, w in enumerate(base.w) if w > 0]
+        bres = simulate_ring([devs[i] for i in active], mp,
+                             [base.w[i] for i in active],
+                             [base.n[i] for i in active])
+        row(f"table6/{label}/prima", f"{res.token_latency * 1e3:.0f}",
+            f"w={sol.w} n={sol.n} k={sol.k}")
+        row(f"table6/{label}/llama.cpp", f"{bres.token_latency * 1e3:.0f}",
+            "")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Heterogeneous scheduling scenarios (paper §4 + A.5):
+
+  * Halda vs the baseline layer-assignment strategies on the Table-2
+    cluster across model scales;
+  * automated device-subset selection ("is more devices always better?");
+  * straggler mitigation: a slow TPU stage gets a smaller window.
+
+    PYTHONPATH=src python examples/heterogeneous_cluster.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import dataclasses
+
+from repro.configs import get_config
+from repro.core import baselines, cluster, halda
+from repro.core.profiles import (paper_table2_cluster, paper_table2_extra,
+                                 profile_from_config, tpu_stage_cluster)
+from repro.core.simulator import simulate_ring
+
+
+def main():
+    devices = paper_table2_cluster()
+
+    print("=== Halda vs baselines (simulated ms/token) ===")
+    for cid in ("llama3-8b", "llama1-30b", "llama3-70b"):
+        mp = profile_from_config(get_config(cid))
+        line = [f"{cid:12s}"]
+        sol = halda.solve(devices, mp)
+        sim = simulate_ring(devices, mp, sol.w, sol.n)
+        line.append(f"halda={sim.token_latency_ms:7.0f}ms(k={sol.k})")
+        for name, strat in baselines.STRATEGIES.items():
+            b = strat(devices, mp)
+            active = [i for i, w in enumerate(b.w) if w > 0]
+            bs = simulate_ring([devices[i] for i in active], mp,
+                               [b.w[i] for i in active],
+                               [b.n[i] for i in active])
+            line.append(f"{name}={bs.token_latency_ms:7.0f}ms")
+        print("  ".join(line))
+
+    print("\n=== device-subset selection (70B) ===")
+    all_devs = devices + paper_table2_extra()
+    mp = profile_from_config(get_config("llama3-70b"))
+    choice = cluster.select_cluster(all_devs, mp)
+    names = [all_devs[i].name for i in choice.devices]
+    print(f"best cluster: {names} "
+          f"({choice.solution.latency * 1e3:.0f} ms analytic)")
+    for devs_idx, lat in choice.history:
+        print(f"  tried {len(devs_idx)} devices -> {lat * 1e3:.0f} ms")
+
+    print("\n=== straggler mitigation on a TPU pod (4 stages) ===")
+    stages = tpu_stage_cluster(4)
+    slow = dataclasses.replace(
+        stages[2], name="straggler",
+        gpu_flops={q: v * 0.25 for q, v in stages[2].gpu_flops.items()})
+    sol = halda.solve([stages[0], stages[1], slow, stages[3]], mp)
+    print(f"windows: {sol.w} (straggler at index 2 gets the smallest)")
+
+
+if __name__ == "__main__":
+    main()

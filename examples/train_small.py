@@ -1,0 +1,24 @@
+"""End-to-end training driver (deliverable b): train a ~100M-param dense
+model for a few hundred steps on the synthetic corpus, with periodic
+checkpointing and restart.
+
+    PYTHONPATH=src python examples/train_small.py --steps 200
+Resumable:
+    PYTHONPATH=src python examples/train_small.py --steps 300 --resume
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.train import main as train_main
+
+
+if __name__ == "__main__":
+    args = sys.argv[1:]
+    if not any(a.startswith("--arch") for a in args):
+        # ~100M params: 8 layers of d=768 qwen-style dense blocks
+        args = ["--arch", "qwen2.5-14b", "--smoke", "--d-model", "768",
+                "--n-layers", "8", "--batch", "8", "--seq", "128",
+                "--steps", "200", "--ckpt-every", "50"] + args
+    raise SystemExit(train_main(args))

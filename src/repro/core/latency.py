@@ -1,0 +1,235 @@
+"""Token-latency model (paper Appendix A.3, eqs. 11-21) and case logic.
+
+Everything here is pure analytic modelling; no JAX. These functions are
+shared by the Halda scheduler (which linearizes them into ILP coefficients)
+and by the benchmarks (which evaluate candidate assignments).
+
+Conventions (decode, single request, steady state):
+  w[m] : layer window size on device m          (decision)
+  n[m] : GPU layers inside the window on m      (decision)
+  k    : rounds per token, k = L / sum(w)
+  l_m  = k * w[m]   total layers on device m    (Assumption 1, R = 0)
+  l_m^gpu = k * n[m]
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .profiles import Case, DeviceProfile, ModelProfile, OS
+
+#: Disk speed below which overloading a device is never worthwhile (paper's
+#: s^disk_threshold). Tuned to the Table-2 cluster: the Mac Air's 0.39 GB/s
+#: disk lands below, the phones' UFS above.
+DISK_SPEED_THRESHOLD = 0.30e9
+
+
+def _sum_q(flops: Dict[str, float], speed: Dict[str, float]) -> float:
+    """sum_q f^q / s^q over quant formats present in the model file."""
+    total = 0.0
+    for q, f in flops.items():
+        s = speed.get(q)
+        if s is None or s <= 0.0:
+            s = max(speed.values()) if speed else 1e9
+        total += f / s
+    return total
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceCoeffs:
+    """Per-device linearized latency coefficients (paper A.3)."""
+
+    alpha: float   # per-CPU-layer latency  (compute + kv copy + mem load)
+    beta: float    # delta per layer moved to GPU (usually negative)
+    xi: float      # per-window overhead (PCIe copies + ring hop)
+
+
+def device_coeffs(dev: DeviceProfile, model: ModelProfile) -> DeviceCoeffs:
+    b_prime = model.b_prime
+    alpha = (_sum_q(model.flops_layer, dev.cpu_flops)
+             + dev.t_kv_copy_cpu
+             + b_prime / dev.cpu_membw)
+    if dev.has_gpu and dev.gpu_flops:
+        gpu_term = (_sum_q(model.flops_layer, dev.gpu_flops)
+                    + dev.t_kv_copy_gpu
+                    + b_prime / max(dev.gpu_membw, 1.0))
+        beta = gpu_term - alpha
+    else:
+        beta = 0.0
+    xi = (dev.t_ram_vram + dev.t_vram_ram) * (0.0 if dev.uma else 1.0) \
+        + dev.t_comm
+    return DeviceCoeffs(alpha=alpha, beta=beta, xi=xi)
+
+
+# ---------------------------------------------------------------------------
+# Case assignment (Section 3.2 Cases 1-4)
+# ---------------------------------------------------------------------------
+
+def b_cio(dev_index: int, model: ModelProfile) -> float:
+    """(b_i/V + b_o) * I[m==head] + c^cpu   (eq. 34)."""
+    extra = model.head_extra_bytes() if dev_index == 0 else 0.0
+    return extra + model.c_cpu
+
+
+def classify_device(dev: DeviceProfile, dev_index: int, model: ModelProfile,
+                    w_m: int, n_m: int, k: int,
+                    forced_m4: bool = False) -> Case:
+    """Assign device to M1..M4 given the current decision variables."""
+    if forced_m4:
+        return Case.M4
+    if dev.disk_speed() < DISK_SPEED_THRESHOLD:
+        return Case.M4
+    l_m = k * w_m
+    l_gpu = k * n_m
+    kvb = model.kv_bytes_per_token_layer * model.n_kv + model.state_bytes
+    head = model.head_extra_bytes() if dev_index == 0 else 0.0
+    if dev.os == OS.MACOS and not dev.has_metal:
+        need = l_m * model.layer_bytes + head + kvb * l_m + model.c_cpu
+        return Case.M1 if need > dev.ram_avail else Case.M4
+    if dev.os == OS.MACOS and dev.has_metal:
+        need = (l_m * model.layer_bytes + head + kvb * l_m
+                + model.c_cpu + model.c_gpu)
+        return Case.M2 if need > dev.vram_avail else Case.M4
+    # Linux / Android / TPU stage: only the CPU-side (streamed) layers can
+    # overload RAM; CUDA/HBM-resident layers are pinned by the driver.
+    swap = 0.0
+    if dev.os == OS.ANDROID:
+        swap = min(dev.bytes_can_swap, dev.swap_avail)
+    need = (l_m - l_gpu) * (model.layer_bytes + kvb) + head + model.c_cpu
+    return Case.M3 if need > dev.ram_avail + swap else Case.M4
+
+
+# ---------------------------------------------------------------------------
+# Objective coefficient vectors a, b, c and constant kappa (Definition 1)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ObjectiveData:
+    """Vectorized LDA coefficients for a fixed case assignment."""
+
+    a: List[float]          # coefficient of w_m
+    b: List[float]          # coefficient of n_m
+    c: List[float]          # constant per device (xi)
+    kappa: float            # global constant
+    cases: List[Case]
+    # memory bounds, already divided by (L * b'): constraint (4)-(5) use
+    # z * W with W = sum(w).
+    z_ram: List[float]      # per-device RAM bound (sign per case)
+    z_gpu: List[float]      # per-device VRAM bound
+
+
+def build_objective(devices: Sequence[DeviceProfile], model: ModelProfile,
+                    cases: Sequence[Case]) -> ObjectiveData:
+    L = model.n_layers
+    b_prime = model.b_prime
+    a: List[float] = []
+    b: List[float] = []
+    c: List[float] = []
+    z_ram: List[float] = []
+    z_gpu: List[float] = []
+    kappa = 0.0
+
+    # Head-device constants (output layer runs on CPU of device 1).
+    head = devices[0]
+    kappa += _sum_q(model.flops_output, head.cpu_flops)
+    kappa += model.head_extra_bytes() / head.cpu_membw
+    kappa += (model.input_bytes / model.vocab) / head.disk_speed()
+    if cases[0] != Case.M4:
+        kappa += model.output_bytes / head.disk_speed()
+
+    for i, (dev, case) in enumerate(zip(devices, cases)):
+        co = device_coeffs(dev, model)
+        sdisk = dev.disk_speed()
+        if case == Case.M1:
+            a.append(co.alpha + b_prime / sdisk)
+            b.append(0.0)
+            kappa += (model.c_cpu - dev.ram_avail) / sdisk
+        elif case == Case.M2:
+            a.append(co.alpha + model.layer_bytes / sdisk)
+            b.append(co.beta)
+        elif case == Case.M3:
+            swap = (min(dev.bytes_can_swap, dev.swap_avail)
+                    if dev.os == OS.ANDROID else 0.0)
+            a.append(co.alpha + b_prime / sdisk)
+            b.append(co.beta - b_prime / sdisk)
+            kappa += (model.c_cpu - dev.ram_avail - swap) / sdisk
+        else:  # M4
+            a.append(co.alpha)
+            b.append(co.beta)
+        c.append(co.xi)
+
+        # RAM bound (constraints 28-33), normalized by (L b').
+        bc = b_cio(i, model)
+        swap = (min(dev.bytes_can_swap, dev.swap_avail)
+                if dev.os == OS.ANDROID else 0.0)
+        if case == Case.M2:
+            bound = (dev.vram_avail - bc - model.c_gpu) / (L * b_prime)
+        elif dev.os == OS.MACOS and dev.has_metal:
+            bound = (dev.vram_avail - bc - model.c_gpu) / (L * b_prime)
+        else:
+            bound = (dev.ram_avail + swap - bc) / (L * b_prime)
+        z_ram.append(bound)
+
+        # VRAM bound (constraints 35-36).
+        if dev.has_cuda:
+            g = (dev.vram_avail - model.c_gpu) / (L * b_prime)
+        elif dev.has_metal:
+            bo = model.output_bytes if i == 0 else 0.0
+            g = (dev.vram_avail - model.c_gpu - bo) / (L * b_prime)
+        else:
+            g = 0.0
+        z_gpu.append(max(g, 0.0))
+
+    return ObjectiveData(a=a, b=b, c=c, kappa=kappa, cases=list(cases),
+                         z_ram=z_ram, z_gpu=z_gpu)
+
+
+def token_latency(devices: Sequence[DeviceProfile], model: ModelProfile,
+                  w: Sequence[int], n: Sequence[int],
+                  cases: Optional[Sequence[Case]] = None) -> float:
+    """Analytic token latency T for an assignment (objective (1))."""
+    W = sum(w)
+    if W == 0:
+        return math.inf
+    L = model.n_layers
+    k = L / W
+    if cases is None:
+        cases = [classify_device(d, i, model, w[i], n[i], max(int(round(k)), 1))
+                 for i, d in enumerate(devices)]
+    obj = build_objective(devices, model, cases)
+    lin = sum(obj.a[i] * w[i] + obj.b[i] * n[i] + obj.c[i]
+              for i in range(len(devices)))
+    return L / W * lin + obj.kappa
+
+
+def ttft(devices: Sequence[DeviceProfile], model: ModelProfile,
+         w: Sequence[int], n: Sequence[int], prompt_len: int = 16) -> float:
+    """Time-to-first-token: prefill modelled as one pass whose compute and
+    KV-write terms scale with the prompt length while weight/disk terms are
+    paid once (mmap'd weights are read once for the whole prompt batch)."""
+    W = sum(w)
+    if W == 0:
+        return math.inf
+    L = model.n_layers
+    cases = [classify_device(d, i, model, w[i], n[i],
+                             max(int(round(L / W)), 1))
+             for i, d in enumerate(devices)]
+    total = 0.0
+    for i, dev in enumerate(devices):
+        co = device_coeffs(dev, model)
+        l_m = L / W * w[i]
+        l_gpu = L / W * n[i]
+        compute_cpu = _sum_q(model.flops_layer, dev.cpu_flops) * prompt_len
+        compute_gpu = (_sum_q(model.flops_layer, dev.gpu_flops) * prompt_len
+                       if dev.has_gpu and dev.gpu_flops else 0.0)
+        total += (l_m - l_gpu) * compute_cpu + l_gpu * compute_gpu
+        total += l_m * model.kv_bytes_per_token_layer * prompt_len \
+            / dev.cpu_membw
+        # weights traverse the memory hierarchy once:
+        if cases[i] != Case.M4:
+            total += (l_m - l_gpu) * model.layer_bytes / dev.disk_speed()
+        total += L / W * co.xi
+    head = devices[0]
+    total += _sum_q(model.flops_output, head.cpu_flops)
+    return total

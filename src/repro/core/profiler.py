@@ -1,0 +1,128 @@
+"""Device profiler — measures the quantities the Halda latency model
+consumes (paper Appendix A.3's "device profiler" component).
+
+On a home device this measures the actual machine; on a TPU stage it
+measures the chip. All measurements are medians of repeated runs with
+warmup, so a profile is stable enough to feed the scheduler
+(the paper's limitation (d): latency varies with co-located load — the
+profiler can simply be re-run and the schedule re-solved, which is the
+elastic path).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import tempfile
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+from .profiles import GiB, OS, QUANTS, DeviceProfile
+
+
+def _median_time(fn, *, warmup: int = 1, iters: int = 5) -> float:
+    for _ in range(warmup):
+        fn()
+    out = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        out.append(time.perf_counter() - t0)
+    out.sort()
+    return out[len(out) // 2]
+
+
+def measure_flops(n: int = 1024, dtype="float32") -> float:
+    """Matmul FLOP/s of the local jax backend."""
+    import jax
+    import jax.numpy as jnp
+
+    a = jnp.ones((n, n), dtype)
+    b = jnp.ones((n, n), dtype)
+    f = jax.jit(lambda x, y: x @ y)
+    jax.block_until_ready(f(a, b))
+    dt = _median_time(lambda: jax.block_until_ready(f(a, b)))
+    return 2.0 * n ** 3 / dt
+
+
+def measure_membw(nbytes: int = 1 << 26) -> float:
+    """Bytes/s for a streaming read+write (copy) on the local backend."""
+    import jax
+    import jax.numpy as jnp
+
+    x = jnp.ones((nbytes // 4,), jnp.float32)
+    f = jax.jit(lambda v: v * 1.0000001)
+    jax.block_until_ready(f(x))
+    dt = _median_time(lambda: jax.block_until_ready(f(x)))
+    return 2.0 * nbytes / dt
+
+
+def measure_kv_copy(kv_bytes: int = 4096) -> float:
+    """Seconds to append one token's KV line into a cache buffer."""
+    import jax
+    import jax.numpy as jnp
+
+    cache = jnp.zeros((1024, kv_bytes // 2), jnp.bfloat16)
+    line = jnp.ones((1, kv_bytes // 2), jnp.bfloat16)
+
+    f = jax.jit(lambda c, t, i: jax.lax.dynamic_update_slice(c, t, (i, 0)))
+    jax.block_until_ready(f(cache, line, 3))
+    return _median_time(lambda: jax.block_until_ready(f(cache, line, 3)))
+
+
+def measure_disk(nbytes: int = 64 << 20, path: Optional[str] = None
+                 ) -> float:
+    """Sequential read bytes/s through the filesystem (page cache dropped
+    is not possible unprivileged — this measures the warm path, an upper
+    bound; the scheduler cares about relative ordering)."""
+    fd, tmp = tempfile.mkstemp(dir=path)
+    try:
+        blob = np.random.default_rng(0).bytes(nbytes)
+        with os.fdopen(fd, "wb") as f:
+            f.write(blob)
+
+        def read():
+            with open(tmp, "rb") as f:
+                while f.read(8 << 20):
+                    pass
+
+        dt = _median_time(read, warmup=1, iters=3)
+        return nbytes / dt
+    finally:
+        os.unlink(tmp)
+
+
+def profile_local_device(name: str = "local", *, quick: bool = True
+                         ) -> DeviceProfile:
+    """Build a DeviceProfile of this machine for the Halda scheduler."""
+    import psutil  # optional
+    ram_avail = 8 * GiB
+    try:
+        ram_avail = float(psutil.virtual_memory().available)
+    except Exception:
+        pass
+    flops = measure_flops(512 if quick else 2048)
+    membw = measure_membw(1 << 24 if quick else 1 << 28)
+    kv = measure_kv_copy()
+    disk = measure_disk(8 << 20 if quick else 256 << 20)
+    return DeviceProfile(
+        name=name, os=OS.LINUX, ram_avail=ram_avail,
+        cpu_flops={q: flops for q in QUANTS},
+        cpu_membw=membw, t_kv_copy_cpu=kv,
+        disk_seq_bps=disk, disk_rand_bps=disk * 0.6,
+        t_comm=1e-4)
+
+
+def profile_local_device_noopt(name: str = "local") -> DeviceProfile:
+    """psutil-free variant (used by tests)."""
+    flops = measure_flops(512)
+    membw = measure_membw(1 << 24)
+    kv = measure_kv_copy()
+    disk = measure_disk(8 << 20)
+    return DeviceProfile(
+        name=name, os=OS.LINUX, ram_avail=8 * GiB,
+        cpu_flops={q: flops for q in QUANTS},
+        cpu_membw=membw, t_kv_copy_cpu=kv,
+        disk_seq_bps=disk, disk_rand_bps=disk * 0.6,
+        t_comm=1e-4)

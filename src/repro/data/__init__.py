@@ -1,0 +1,4 @@
+from .pipeline import (ByteTokenizer, RequestGenerator, SyntheticCorpus,
+                       batches)
+
+__all__ = ["ByteTokenizer", "RequestGenerator", "SyntheticCorpus", "batches"]

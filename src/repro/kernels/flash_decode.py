@@ -1,0 +1,112 @@
+"""Pallas TPU kernel: decode attention (one query position per sequence).
+
+Grid (B, h_kv, S/bs): each program handles one (batch, kv-head) pair and
+one KV chunk; the GQA query group (n_rep heads) rides along in the block.
+Online softmax keeps running (m, l, acc) in VMEM scratch across the
+sequential KV-chunk axis; ``kv_len`` arrives via scalar prefetch so chunk
+masking (and the optional sliding window) uses real lengths.
+
+Block working set (bs=512, n_rep=8, D=128):
+  k/v tiles 2 * 512*128*2  = 256 KiB
+  q tile    8*128*2        = 2 KiB
+  acc       8*128*4        = 4 KiB
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(kv_len_ref, q_ref, k_ref, v_ref, out_ref, acc_ref, m_ref, l_ref,
+            *, block_s: int, window: Optional[int], n_chunks: int):
+    b = pl.program_id(0)
+    s_idx = pl.program_id(2)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0]                                  # (n_rep, D)
+    k = k_ref[0, 0]                                  # (bs, D)
+    v = v_ref[0, 0]
+    kv_len = kv_len_ref[b]
+
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    s = jnp.dot(q.astype(jnp.float32) * scale, k.astype(jnp.float32).T,
+                preferred_element_type=jnp.float32)  # (n_rep, bs)
+
+    pos = s_idx * block_s + jax.lax.broadcasted_iota(jnp.int32,
+                                                     (1, block_s), 1)
+    mask = pos < kv_len
+    if window is not None:
+        mask &= pos >= (kv_len - window)
+    s = jnp.where(mask, s, -jnp.inf)
+
+    m_prev = m_ref[...]                              # (n_rep, 1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    p = jnp.exp(s - m_safe)
+    p = jnp.where(mask, p, 0.0)
+    corr = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, -1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+        p, v.astype(jnp.float32), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(s_idx == n_chunks - 1)
+    def _done():
+        out_ref[0, 0] = (acc_ref[...]
+                         / jnp.maximum(l_ref[...], 1e-30)
+                         ).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_s",
+                                             "interpret"))
+def flash_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                 kv_len: jnp.ndarray, *, window: Optional[int] = None,
+                 block_s: int = 512, interpret: bool = False) -> jnp.ndarray:
+    """q: (B, H, D); k/v: (B, S, h_kv, D); kv_len: (B,) -> out (B, H, D)."""
+    B, H, D = q.shape
+    S, h_kv = k.shape[1], k.shape[2]
+    n_rep = H // h_kv
+    bs = min(block_s, S)
+    assert S % bs == 0, (S, bs)
+    n_chunks = S // bs
+    qg = q.reshape(B, h_kv, n_rep, D)
+    kt = k.transpose(0, 2, 1, 3)                     # (B, h_kv, S, D)
+    vt = v.transpose(0, 2, 1, 3)
+
+    grid = (B, h_kv, n_chunks)
+    out = pl.pallas_call(
+        functools.partial(_kernel, block_s=bs, window=window,
+                          n_chunks=n_chunks),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, n_rep, D),
+                             lambda b, h, s, *_: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, bs, D), lambda b, h, s, *_: (b, h, s, 0)),
+                pl.BlockSpec((1, 1, bs, D), lambda b, h, s, *_: (b, h, s, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, n_rep, D),
+                                   lambda b, h, s, *_: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((n_rep, D), jnp.float32),
+                pltpu.VMEM((n_rep, 1), jnp.float32),
+                pltpu.VMEM((n_rep, 1), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, h_kv, n_rep, D), q.dtype),
+        interpret=interpret,
+    )(kv_len.astype(jnp.int32), qg, kt, vt)
+    return out.reshape(B, H, D)

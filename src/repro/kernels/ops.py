@@ -1,0 +1,49 @@
+"""Jit'd wrappers that dispatch to the Pallas kernels on TPU and to
+``interpret=True`` (or the jnp oracle) elsewhere.
+
+``use_kernels(False)`` forces the pure-jnp path — used by the GSPMD
+dry-run, where the module must lower for the host platform.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_decode import flash_decode as _flash_decode_kernel
+from .q4_matmul import q4_matmul as _q4_matmul_kernel
+from .ssd_scan import ssd_scan as _ssd_scan_kernel
+
+_FORCE_REF = False
+
+
+def use_kernels(enable: bool) -> None:
+    global _FORCE_REF
+    _FORCE_REF = not enable
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def q4_matmul(x, packed, scale, *, group: int = 64):
+    if _FORCE_REF:
+        return ref.q4_matmul_ref(x, packed, scale, group=group)
+    return _q4_matmul_kernel(x, packed, scale, group=group,
+                             interpret=_interpret())
+
+
+def flash_decode(q, k, v, kv_len, *, window: Optional[int] = None):
+    if _FORCE_REF:
+        return ref.flash_decode_ref(q, k, v, kv_len, window=window)
+    return _flash_decode_kernel(q, k, v, kv_len, window=window,
+                                interpret=_interpret())
+
+
+def ssd_scan(x, dt, A, Bmat, Cmat, *, chunk: int = 128):
+    if _FORCE_REF:
+        return ref.ssd_scan_ref(x, dt, A, Bmat, Cmat, chunk=chunk)
+    return _ssd_scan_kernel(x, dt, A, Bmat, Cmat, chunk=chunk,
+                            interpret=_interpret())

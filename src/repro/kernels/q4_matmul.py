@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: W4A16 grouped-quantized matmul, dequant-in-kernel.
+
+The paper's hot loop is Q4K matvec/matmul on CPU/CUDA; the TPU-native
+adaptation streams int4-packed weights HBM->VMEM (half the bytes of bf16,
+which matters because decode is weight-bandwidth-bound) and dequantizes
+tile-by-tile in VMEM right before feeding the MXU.
+
+Layout: x (M, K) activations; packed (K/2, N) int8 (two int4 per byte along
+the contraction axis); scale (K/group, N). Block sizes keep every tile
+MXU-aligned (multiples of 128 on the matmul dims) and the working set
+within VMEM:
+
+  x tile (bm, bk) bf16            : bm*bk*2
+  packed tile (bk/2, bn) int8     : bk*bn/2
+  scale tile (bk/g, bn)           : small
+  out tile (bm, bn) f32 (+acc)    : bm*bn*4
+
+Default (256, 512, 256): 256*512*2 + 512*256/2 + 256*256*4 ~ 0.6 MiB.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, packed_ref, scale_ref, out_ref, *, group: int,
+            n_k_blocks: int):
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _zero():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[...]                                   # (bm, bk)
+    packed = packed_ref[...]                         # (bk/2, bn)
+    scale = scale_ref[...]                           # (bk/g, bn)
+
+    # unpack two int4 per byte (sign-extended)
+    lo = (packed & 0xF).astype(jnp.int8)
+    hi = ((packed >> 4) & 0xF).astype(jnp.int8)
+    lo = jnp.where(lo > 7, lo - 16, lo)
+    hi = jnp.where(hi > 7, hi - 16, hi)
+    kh, bn = packed.shape
+    w_q = jnp.stack([lo, hi], axis=1).reshape(kh * 2, bn)   # (bk, bn)
+
+    # broadcast per-group scales to per-row
+    g_rows = scale.shape[0]
+    scale_full = jnp.broadcast_to(scale[:, None, :], (g_rows, group, bn)
+                                  ).reshape(g_rows * group, bn)
+    w = w_q.astype(jnp.float32) * scale_full.astype(jnp.float32)
+
+    out_ref[...] += jnp.dot(x.astype(jnp.float32), w,
+                            preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("group", "block_m", "block_n",
+                                             "block_k", "interpret"))
+def q4_matmul(x: jnp.ndarray, packed: jnp.ndarray, scale: jnp.ndarray, *,
+              group: int = 64, block_m: int = 256, block_n: int = 512,
+              block_k: int = 256, interpret: bool = False) -> jnp.ndarray:
+    """x: (M, K); packed: (K/2, N) int8; scale: (K/group, N). -> (M, N) f32."""
+    M, K = x.shape
+    N = packed.shape[1]
+    assert packed.shape[0] * 2 == K
+    assert scale.shape == (K // group, N), (scale.shape, K, group, N)
+    bm = min(block_m, M)
+    bn = min(block_n, N)
+    bk = min(block_k, K)
+    assert K % bk == 0 and bk % group == 0
+    assert M % bm == 0 and N % bn == 0
+    grid = (M // bm, N // bn, K // bk)
+    return pl.pallas_call(
+        functools.partial(_kernel, group=group, n_k_blocks=K // bk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk // 2, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bk // group, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, packed, scale)

@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models.layers import decode_attention, ssd_chunked
+from ..quant.grouped import QuantizedTensor, dequantize_q4
+
+
+def q4_matmul_ref(x: jnp.ndarray, packed: jnp.ndarray, scale: jnp.ndarray,
+                  *, group: int = 64) -> jnp.ndarray:
+    """Dequantize-then-matmul oracle."""
+    K = packed.shape[0] * 2
+    N = packed.shape[1]
+    qt = QuantizedTensor(packed=packed, scale=scale, bits=4, group=group,
+                         shape=(K, N))
+    w = dequantize_q4(qt, jnp.float32)
+    return x.astype(jnp.float32) @ w
+
+
+def flash_decode_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     kv_len: jnp.ndarray, *,
+                     window: Optional[int] = None) -> jnp.ndarray:
+    """q: (B, H, D) -> (B, H, D) via the model-layer decode attention."""
+    out = decode_attention(q[:, None], k, v, kv_len, window=window)
+    return out[:, 0]
+
+
+def ssd_scan_ref(x, dt, A, Bmat, Cmat, *, chunk: int = 128):
+    """SSD oracle: the model-layer chunked scan (itself validated against a
+    sequential recurrence in tests)."""
+    return ssd_chunked(x, dt, A, Bmat, Cmat, chunk=chunk)
+
+
+def ssd_sequential_ref(x, dt, A, Bmat, Cmat):
+    """O(S) sequential recurrence — ground truth for both SSD paths."""
+    Bsz, S, nh, P = x.shape
+    N = Bmat.shape[-1]
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp                       # (B,nh,P),(B,nh),(B,N),(B,N)
+        dA = jnp.exp(dtt * A[None, :])              # (B, nh)
+        h = h * dA[..., None, None] + jnp.einsum(
+            "bh,bhp,bn->bhpn", dtt, xt, bt)
+        y = jnp.einsum("bn,bhpn->bhp", ct, h)
+        return h, y
+
+    h0 = jnp.zeros((Bsz, nh, P, N), jnp.float32)
+    xs = (x.transpose(1, 0, 2, 3).astype(jnp.float32),
+          dt.transpose(1, 0, 2).astype(jnp.float32),
+          Bmat.transpose(1, 0, 2).astype(jnp.float32),
+          Cmat.transpose(1, 0, 2).astype(jnp.float32))
+    h_fin, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), h_fin.astype(x.dtype)

@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+A function, not a module-level constant — importing this module must never
+touch jax device state (the dry-run pins the device count before any jax
+initialization).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; the multi-pod mesh adds a leading
+    2-pod data-parallel axis (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_stages: int = 4, tp: int = 2, *,
+                    multi_pod: bool = False):
+    """Small mesh for CPU tests (requires xla_force_host_platform_device_count
+    >= n_stages * tp [* 2])."""
+    if multi_pod:
+        return jax.make_mesh((2, n_stages, tp), ("pod", "data", "model"))
+    return jax.make_mesh((n_stages, tp), ("data", "model"))
+
+
+# -- hardware constants (TPU v5e target) ------------------------------------
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link
+CHIP_HBM_BYTES = 16 * (1 << 30)

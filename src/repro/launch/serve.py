@@ -1,0 +1,107 @@
+"""Serving driver: ``python -m repro.launch.serve --arch <id> --smoke``.
+
+Runs batched requests through prefill + piped-ring decode. On CPU the
+debug mesh is (data=4, model=2) over 8 forced host devices (set
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``); on a real pod the
+same code takes the production mesh.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get_config
+from ..data import RequestGenerator
+from ..models import init_cache, init_params, prefill
+from ..runtime import serve as RS
+from .mesh import make_debug_mesh, make_production_mesh
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-14b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--ring-k", type=int, default=1)
+    ap.add_argument("--ctx", type=int, default=64)
+    ap.add_argument("--mesh", choices=("debug", "prod"), default="debug")
+    ap.add_argument("--stages", type=int, default=4)
+    ap.add_argument("--tp", type=int, default=2)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.reduced()
+    if args.mesh == "prod":
+        mesh = make_production_mesh()
+        stages = 16
+        tp = 16
+    else:
+        mesh = make_debug_mesh(args.stages, args.tp)
+        stages, tp = args.stages, args.tp
+
+    B = args.batch
+    if not RS.ring_supported(cfg, B, stages):
+        print(f"{cfg.name}: ring unsupported for B={B}, M={stages} "
+              f"(family={cfg.family}) — GSPMD decode path")
+        ring = False
+    else:
+        ring = True
+
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    gen = RequestGenerator(cfg.vocab, seed=1,
+                           prompt_len=(args.prompt_len,
+                                       args.prompt_len + 1))
+    reqs = gen.generate(B)
+    prompts = jnp.asarray(np.stack([r.prompt for r in reqs]))
+
+    # prefill on the plain path (batch prompts, same length)
+    cache = init_cache(cfg, B, args.ctx, dtype=jnp.float32)
+    t0 = time.time()
+    logits, cache = prefill(params, cfg, prompts, cache)
+    nxt = jnp.argmax(logits[:, -1], -1)[:, None]
+    ttft = time.time() - t0
+    print(f"prefill: {B}×{args.prompt_len} tokens in {ttft*1e3:.0f} ms")
+
+    if ring:
+        plan = RS.RingPlan.make(cfg, stages, k=args.ring_k)
+        pr = RS.pad_vocab(dict(params), cfg, tp)
+        pr["blocks"] = RS.pad_and_permute(params["blocks"], cfg, stages,
+                                          plan.k)
+        cache["layers"] = RS.pad_and_permute(cache["layers"], cfg, stages,
+                                             plan.k)
+        step = RS.build_ring_serve_step(cfg, mesh, plan)(pr, cache)
+        ln = cache["len"]
+        out_tokens = [nxt]
+        t0 = time.time()
+        for t in range(args.new_tokens):
+            logits, cache = step(nxt, ln, pr, cache)
+            ln = ln + 1
+            nxt = jnp.argmax(logits[:, 0, :cfg.vocab], -1)[:, None]
+            out_tokens.append(nxt)
+        dt = time.time() - t0
+        print(f"ring decode (k={plan.k}, w={plan.w}, M={stages}, TP={tp}): "
+              f"{args.new_tokens} tokens × {B} seqs in {dt:.2f}s "
+              f"-> {dt / args.new_tokens * 1e3:.1f} ms/token/batch")
+    else:
+        step = RS.gspmd_decode_step(cfg, mesh, params, cache)
+        t0 = time.time()
+        for t in range(args.new_tokens):
+            logits, cache = step(params, cache, nxt)
+            nxt = jnp.argmax(logits[:, 0], -1)[:, None]
+        dt = time.time() - t0
+        print(f"gspmd decode: {args.new_tokens} × {B} in {dt:.2f}s")
+    print("sample token ids:", np.asarray(nxt).ravel()[:8].tolist())
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

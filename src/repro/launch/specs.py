@@ -1,0 +1,98 @@
+"""ShapeDtypeStruct stand-ins for every (arch × shape × step) cell.
+
+No device allocation happens here — params, optimizer state, caches and
+batches are all ``jax.eval_shape`` / ``ShapeDtypeStruct`` trees, which is
+what ``jit(...).lower()`` needs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import SHAPES, ModelConfig, ShapeSpec
+from ..models import model as M
+from ..runtime import serve
+from ..runtime.optim import AdamW
+
+#: decode context is bounded by the arch's own window/limits
+def decode_context(cfg: ModelConfig, shape: ShapeSpec) -> int:
+    S = shape.seq_len
+    if cfg.attn_window:
+        S = min(S, cfg.attn_window) if cfg.family != "hybrid" else S
+    if cfg.max_decode_len:
+        S = min(S, cfg.max_decode_len)
+    return S
+
+
+def params_shapes(cfg: ModelConfig, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda: M.init_params(cfg, jax.random.PRNGKey(0), dtype=dtype))
+
+
+def ring_params_shapes(cfg: ModelConfig, n_stages: int, k: int, tp: int,
+                       dtype=jnp.bfloat16, quant: int = 0):
+    def build():
+        p = M.init_params(cfg, jax.random.PRNGKey(0), dtype=dtype)
+        p = serve.pad_vocab(p, cfg, tp)
+        p["blocks"] = serve.pad_and_permute(p["blocks"], cfg, n_stages, k)
+        if quant:
+            p = serve.quantize_ring_params(p, cfg, tp=tp)
+        return p
+    return jax.eval_shape(build)
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, max_len: int,
+                 dtype=jnp.bfloat16, *, ring: Optional[Tuple[int, int]] = None):
+    def build():
+        c = M.init_cache(cfg, batch, max_len, dtype=dtype)
+        if ring is not None:
+            n_stages, k = ring
+            c["layers"] = serve.pad_and_permute(c["layers"], cfg, n_stages, k)
+        return c
+    return jax.eval_shape(build)
+
+
+def opt_shapes(params_like, optimizer: Optional[AdamW] = None):
+    optimizer = optimizer or AdamW()
+    return jax.eval_shape(optimizer.init, params_like)
+
+
+def batch_shapes(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Model inputs for one cell (excluding params/cache/opt)."""
+    B, S = shape.global_batch, shape.seq_len
+    sd = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        out = {"tokens": sd((B, S), jnp.int32),
+               "labels": sd((B, S), jnp.int32)}
+        if cfg.frontend:
+            out["embeds"] = sd((B, cfg.n_frontend_tokens, cfg.d_model),
+                               jnp.bfloat16)
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": sd((B, S), jnp.int32)}
+        if cfg.frontend:
+            out["embeds"] = sd((B, cfg.n_frontend_tokens, cfg.d_model),
+                               jnp.bfloat16)
+        return out
+    # decode: one new token against a seq_len context
+    return {"tokens": sd((B, 1), jnp.int32),
+            "ln": sd((B,), jnp.int32)}
+
+
+def input_specs(arch_or_cfg, shape_name: str) -> Dict[str, Any]:
+    """Public helper: full ShapeDtypeStruct set for a cell (params, cache,
+    batch) — the pattern the dry-run and the roofline benchmarks share."""
+    from ..configs import get_config
+    cfg = (arch_or_cfg if isinstance(arch_or_cfg, ModelConfig)
+           else get_config(arch_or_cfg))
+    shape = SHAPES[shape_name]
+    out = {"batch": batch_shapes(cfg, shape),
+           "params": params_shapes(cfg)}
+    if shape.kind != "train":
+        ctx = decode_context(cfg, shape)
+        out["cache"] = cache_shapes(cfg, shape.global_batch, ctx)
+    return out

@@ -1,0 +1,5 @@
+from .model import (decode_step, forward, init_cache, init_params, prefill,
+                    whisper_encode)
+
+__all__ = ["decode_step", "forward", "init_cache", "init_params", "prefill",
+           "whisper_encode"]

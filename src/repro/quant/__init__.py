@@ -1,0 +1,7 @@
+from .grouped import (dequantize_q4, dequantize_q2, pack_q4, quantize_q4,
+                      quantize_q2, unpack_q4, QuantizedTensor,
+                      quantize_tree, dequantize_leaf)
+
+__all__ = ["dequantize_q4", "dequantize_q2", "pack_q4", "quantize_q4",
+           "quantize_q2", "unpack_q4", "QuantizedTensor", "quantize_tree",
+           "dequantize_leaf"]

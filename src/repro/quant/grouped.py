@@ -1,0 +1,162 @@
+"""Grouped low-bit weight quantization — the TPU-side analogue of Q4K/IQ1.
+
+The paper runs Q4K (4-bit, grouped scales) weights through llama.cpp's CPU
+and CUDA backends; here weights are quantized per-group along the input
+(contraction) dimension so a matmul kernel can dequantize tile-by-tile in
+VMEM (see ``kernels/q4_matmul.py``).
+
+Formats:
+  q4: int4 symmetric, group_size contiguous weights share one f16-ish scale
+      (~4.5 bits/weight incl. scale, matching the paper's Q4K accounting).
+  q2: int2 symmetric (IQ1-ish demo, ~2.25 bits/weight).
+
+int4 values are packed two-per-int8 for a genuinely 4-bit memory footprint.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_GROUP = 64
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QuantizedTensor:
+    """Packed quantized weight + per-group scales.
+
+    ``packed``: int8, shape (..., K/2 [q4] or K/4 [q2], N)-style packing on
+    the *contraction* axis (axis=-2 by convention for (K, N) weights).
+    """
+
+    packed: jnp.ndarray
+    scale: jnp.ndarray           # (..., K/group, N)
+    bits: int
+    group: int
+    shape: Tuple[int, ...]       # original (…, K, N)
+
+    def tree_flatten(self):
+        return (self.packed, self.scale), (self.bits, self.group, self.shape)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        packed, scale = children
+        bits, group, shape = aux
+        return cls(packed=packed, scale=scale, bits=bits, group=group,
+                   shape=shape)
+
+    @property
+    def nbytes(self) -> int:
+        return self.packed.size * self.packed.dtype.itemsize \
+            + self.scale.size * self.scale.dtype.itemsize
+
+
+# --------------------------------------------------------------------------- #
+#  int4
+# --------------------------------------------------------------------------- #
+
+def quantize_q4(w: jnp.ndarray, group: int = DEFAULT_GROUP
+                ) -> QuantizedTensor:
+    """Symmetric int4 grouped quantization along axis -2 (contraction)."""
+    *lead, K, N = w.shape
+    assert K % group == 0, (K, group)
+    wg = w.astype(jnp.float32).reshape(*lead, K // group, group, N)
+    amax = jnp.max(jnp.abs(wg), axis=-2, keepdims=True)       # (..., K/g,1,N)
+    scale = jnp.maximum(amax / 7.0, 1e-8)
+    q = jnp.clip(jnp.round(wg / scale), -7, 7).astype(jnp.int8)
+    q = q.reshape(*lead, K, N)
+    packed = pack_q4(q)
+    return QuantizedTensor(packed=packed,
+                           scale=scale[..., 0, :].astype(jnp.bfloat16),
+                           bits=4, group=group, shape=tuple(w.shape))
+
+
+def pack_q4(q: jnp.ndarray) -> jnp.ndarray:
+    """Pack int4 values (as int8 in [-7,7]) two-per-byte along axis -2."""
+    *lead, K, N = q.shape
+    lo = q[..., 0::2, :] & 0xF
+    hi = q[..., 1::2, :] & 0xF
+    return (lo | (hi << 4)).astype(jnp.int8)
+
+
+def unpack_q4(packed: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of pack_q4: (…, K/2, N) int8 -> (…, K, N) int8 in [-8,7]."""
+    lo = (packed & 0xF).astype(jnp.int8)
+    hi = ((packed >> 4) & 0xF).astype(jnp.int8)
+    # sign-extend 4-bit two's complement
+    lo = jnp.where(lo > 7, lo - 16, lo)
+    hi = jnp.where(hi > 7, hi - 16, hi)
+    *lead, Kh, N = packed.shape
+    out = jnp.stack([lo, hi], axis=-2)           # (..., Kh, 2, N)
+    return out.reshape(*lead, Kh * 2, N)
+
+
+def dequantize_q4(qt: QuantizedTensor, dtype=jnp.float32) -> jnp.ndarray:
+    # derive dims from the packed array itself (a sliced QuantizedTensor —
+    # e.g. one scan step of a stacked layer bank — keeps stale .shape aux)
+    q = unpack_q4(qt.packed).astype(jnp.float32)
+    *lead, K, N = q.shape
+    qg = q.reshape(*lead, K // qt.group, qt.group, N)
+    w = qg * qt.scale[..., :, None, :].astype(jnp.float32)
+    return w.reshape(*lead, K, N).astype(dtype)
+
+
+# --------------------------------------------------------------------------- #
+#  int2 (IQ1-ish demo)
+# --------------------------------------------------------------------------- #
+
+def quantize_q2(w: jnp.ndarray, group: int = DEFAULT_GROUP
+                ) -> QuantizedTensor:
+    *lead, K, N = w.shape
+    assert K % group == 0
+    wg = w.astype(jnp.float32).reshape(*lead, K // group, group, N)
+    amax = jnp.max(jnp.abs(wg), axis=-2, keepdims=True)
+    scale = jnp.maximum(amax / 1.0, 1e-8)
+    q = jnp.clip(jnp.round(wg / scale), -1, 1).astype(jnp.int8)
+    packed = q.reshape(*lead, K, N)              # stored unpacked (demo)
+    return QuantizedTensor(packed=packed,
+                           scale=scale[..., 0, :].astype(jnp.bfloat16),
+                           bits=2, group=group, shape=tuple(w.shape))
+
+
+def dequantize_q2(qt: QuantizedTensor, dtype=jnp.float32) -> jnp.ndarray:
+    *lead, K, N = qt.packed.shape
+    qg = qt.packed.astype(jnp.float32).reshape(*lead, K // qt.group,
+                                               qt.group, N)
+    w = qg * qt.scale[..., :, None, :].astype(jnp.float32)
+    return w.reshape(*lead, K, N).astype(dtype)
+
+
+# --------------------------------------------------------------------------- #
+#  pytree helpers
+# --------------------------------------------------------------------------- #
+
+def _is_weight(path: str, leaf: jnp.ndarray, group: int) -> bool:
+    return (leaf.ndim >= 2 and leaf.shape[-2] % group == 0
+            and leaf.shape[-1] >= 8 and "norm" not in path.lower())
+
+
+def quantize_tree(params: Dict[str, Any], group: int = DEFAULT_GROUP,
+                  bits: int = 4) -> Dict[str, Any]:
+    """Quantize every eligible matmul weight in a parameter pytree."""
+    quant = quantize_q4 if bits == 4 else quantize_q2
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree_util.tree_structure(params)
+    out = []
+    for path, leaf in flat:
+        name = jax.tree_util.keystr(path)
+        if _is_weight(name, leaf, group):
+            out.append(quant(leaf, group))
+        else:
+            out.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def dequantize_leaf(leaf, dtype=jnp.float32):
+    if isinstance(leaf, QuantizedTensor):
+        fn = dequantize_q4 if leaf.bits == 4 else dequantize_q2
+        return fn(leaf, dtype)
+    return leaf

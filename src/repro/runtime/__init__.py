@@ -1,0 +1,1 @@
+from . import checkpoint, elastic, optim, serve, sharding, train  # noqa

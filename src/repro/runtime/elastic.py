@@ -1,0 +1,73 @@
+"""Elastic ring: stage failure -> Halda re-solve -> window remap -> resume.
+
+The paper's A.5 shows the scheduler choosing device subsets; the same
+machinery gives fault tolerance on a pod: when a stage (or host) dies, the
+survivors re-run Halda over the reduced stage list (possibly with reduced
+HBM budgets for stages co-located with recovery work), re-permute the layer
+stack for the new (M', k', w') plan, and continue from the last token — KV
+state for the lost stage's layers is rebuilt by a re-prefill of the
+conversation so far (decode state is the only non-checkpointed state).
+
+Straggler mitigation is the same mechanism with a soft signal: the device
+profiler feeds per-stage throughput into Halda, which shrinks the slow
+stage's windows instead of dropping it (heterogeneous w_m) — exercised in
+the simulator-backed tests; the SPMD ring uses the uniform-window plan the
+solver returns for healthy homogeneous pods.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core import halda
+from ..core.profiles import DeviceProfile, ModelProfile
+from ..core.ring import build_schedule, RingSchedule
+from ..configs.base import ModelConfig
+from .serve import RingPlan, padded_layers
+
+
+@dataclasses.dataclass
+class ElasticState:
+    stages: List[int]                  # surviving stage ids (mesh coords)
+    plan: RingPlan
+    generation: int = 0
+
+
+def initial_state(cfg: ModelConfig, n_stages: int, k: int = 1
+                  ) -> ElasticState:
+    return ElasticState(stages=list(range(n_stages)),
+                        plan=RingPlan.make(cfg, n_stages, k=k))
+
+
+def fail_stages(state: ElasticState, cfg: ModelConfig,
+                failed: Sequence[int], *, k: Optional[int] = None
+                ) -> ElasticState:
+    """Drop failed stages and recompute the ring plan for the survivors."""
+    survivors = [s for s in state.stages if s not in set(failed)]
+    if not survivors:
+        raise RuntimeError("all stages failed")
+    M = len(survivors)
+    if k is None:
+        # keep per-stage layer count near the old plan: more rounds on a
+        # smaller ring (the piped-ring knob the paper turns)
+        per_stage = padded_layers(cfg.n_layers, M) // M
+        k = max(1, min(state.plan.k * state.plan.w, per_stage))
+        while per_stage % k:
+            k -= 1
+    plan = RingPlan.make(cfg, M, k=k)
+    return ElasticState(stages=survivors, plan=plan,
+                        generation=state.generation + 1)
+
+
+def resolve_heterogeneous(devices: Sequence[DeviceProfile],
+                          model: ModelProfile) -> halda.HaldaSolution:
+    """Full Halda re-solve for heterogeneous survivors (reduced HBM budgets,
+    stragglers with degraded throughput, mixed stage sizes)."""
+    return halda.solve(devices, model)
+
+
+def remap_schedule(sol: halda.HaldaSolution, L: int) -> RingSchedule:
+    """Concrete layer->window schedule for a Halda solution."""
+    return build_schedule(sol.w, sol.n, L)

@@ -1,0 +1,73 @@
+"""Optimizer substrate (no external deps): AdamW with global-norm clipping.
+
+Optimizer state is sharded like the parameters (FSDP), so per-chip memory
+is (params + 2 moments) / |data axis|.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    clip_norm: Optional[float] = 1.0
+    warmup_steps: int = 100
+
+    def init(self, params: Any) -> AdamState:
+        zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32),
+                             params)
+        return AdamState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                         nu=jax.tree.map(jnp.copy, zeros))
+
+    def schedule(self, step):
+        warm = jnp.minimum(step / max(self.warmup_steps, 1), 1.0)
+        return self.lr * warm
+
+    def update(self, grads: Any, state: AdamState, params: Any
+               ) -> Tuple[Any, AdamState]:
+        step = state.step + 1
+        if self.clip_norm is not None:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, self.clip_norm
+                                / jnp.maximum(gnorm, 1e-12))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1)
+                          * g.astype(jnp.float32), state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2)
+                          * jnp.square(g.astype(jnp.float32)),
+                          state.nu, grads)
+        t = step.astype(jnp.float32)
+        mu_hat_scale = 1.0 / (1 - b1 ** t)
+        nu_hat_scale = 1.0 / (1 - b2 ** t)
+        lr = self.schedule(step)
+
+        def upd(p, m, v):
+            u = (m * mu_hat_scale) / (jnp.sqrt(v * nu_hat_scale) + self.eps)
+            if self.weight_decay:
+                u = u + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        return new_params, AdamState(step=step, mu=mu, nu=nu)
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))

@@ -1,0 +1,249 @@
+"""Partition specs for the GSPMD (pjit) paths.
+
+Mesh axes:
+  "pod"   : data-parallel replica dimension across pods (multi-pod only)
+  "data"  : FSDP / batch axis within a pod (16 on the production mesh)
+  "model" : tensor-parallel axis (16)
+
+Rules (applied by leaf name; the stacked layer axis is never sharded):
+  * column-parallel weights (d -> heads*hd / d_ff):  (L, d, out) ->
+    P(None, "data", "model")   — FSDP on the contraction dim, TP on out.
+  * row-parallel weights (heads*hd / d_ff -> d):     (L, in, d) ->
+    P(None, "model", "data").
+  * MoE experts: expert-parallel over "model" when E % tp == 0, else
+    TP inside each expert on the f dim.
+  * embeddings: vocab over "model", d over "data" (both large).
+  * norms / small vectors: replicated.
+
+GSPMD tolerates non-divisible shardings by padding (e.g. 40 heads over 16
+chips); that waste shows up honestly in the roofline FLOPs.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig
+
+_COL = {"wq", "wk", "wv", "w_gate", "w_up", "wq_b", "wk_b", "wv_b",
+        "w_x", "w_y", "w_z", "w_b", "w_c", "w_dt", "in_proj"}
+_ROW = {"wo", "w_down", "w_out", "out_proj"}
+_LATENT = {"wq_a", "wkv_a"}
+
+
+def _leaf_key(path_str: str) -> str:
+    keys = re.findall(r"\['([^']+)'\]", path_str)
+    return keys[-1] if keys else path_str
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def sanitize(spec: P, shape, mesh: Mesh) -> P:
+    """Drop spec axes whose mesh size does not divide the array dim —
+    explicit jit argument shardings require exact divisibility. The result
+    always has exactly ``len(shape)`` entries."""
+    padded = (tuple(spec) + (None,) * len(shape))[:len(shape)]
+    out = []
+    for i, axis in enumerate(padded):
+        if axis is None:
+            out.append(None)
+            continue
+        if shape[i] % _axis_size(mesh, axis) == 0:
+            out.append(axis)
+        elif isinstance(axis, (tuple, list)):
+            # try a prefix of the axis tuple (e.g. drop "data", keep "pod")
+            kept = None
+            for j in range(len(axis) - 1, 0, -1):
+                if shape[i] % _axis_size(mesh, axis[:j]) == 0:
+                    kept = tuple(axis[:j])
+                    break
+            out.append(kept)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def batch_axes(mesh: Mesh):
+    """Axes used for the batch dimension (pods fold into data-parallel)."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+#: experiment override for MoE expert-parallelism (None = auto by
+#: divisibility). Set via ``set_moe_ep`` (dry-run --moe-ep flag).
+_MOE_EP_OVERRIDE: Optional[bool] = None
+
+
+def set_moe_ep(value: Optional[bool]) -> None:
+    global _MOE_EP_OVERRIDE
+    _MOE_EP_OVERRIDE = value
+
+
+def moe_ep(cfg: ModelConfig, mesh: Mesh) -> bool:
+    if _MOE_EP_OVERRIDE is not None:
+        return _MOE_EP_OVERRIDE and cfg.n_experts > 0 \
+            and cfg.n_experts % mesh.shape["model"] == 0
+    tp = mesh.shape["model"]
+    return cfg.n_experts > 0 and cfg.n_experts % tp == 0
+
+
+def param_spec(cfg: ModelConfig, mesh: Mesh, path: str,
+               leaf_ndim: int, style: str = "fsdp") -> P:
+    """PartitionSpec for one parameter leaf.
+
+    style="fsdp": weights sharded over data AND model (ZeRO-3-like; XLA
+    all-gathers per layer per use — collective-heavy, memory-light).
+    style="zero1": weights TP-sharded only (replicated over data);
+    optimizer moments are data-sharded (``zero1_moment_shardings``), so the
+    per-step collective cost is one grad reduce-scatter + one param
+    all-gather instead of per-layer-per-microbatch gathers.
+    """
+    key = _leaf_key(path)
+    ep = moe_ep(cfg, mesh)
+    if style == "zero1":
+        spec = param_spec(cfg, mesh, path, leaf_ndim, style="fsdp")
+        return P(*[None if ax == "data" else ax for ax in spec])
+
+    if key == "embed":
+        return P("model", "data")
+    if key == "unembed":
+        return P("data", "model")
+
+    # MoE expert banks (L, E, d, f) / (L, E, f, d)
+    if leaf_ndim == 4 and key in ("w_gate", "w_up"):
+        return P(None, "model", "data", None) if ep \
+            else P(None, None, "data", "model")
+    if leaf_ndim == 4 and key == "w_down":
+        return P(None, "model", None, "data") if ep \
+            else P(None, None, "model", "data")
+    if key == "router":
+        return P(None, "data", None)
+
+    if key in _ROW:
+        return P(None, "model", "data") if leaf_ndim == 3 \
+            else P("model", "data")
+    if key in _COL:
+        return P(None, "data", "model") if leaf_ndim == 3 \
+            else P("data", "model")
+    if key in _LATENT:
+        return P(None, "data", None)
+    # conv weights, gates, norms, biases, scalars: replicated
+    return P()
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, params: Any,
+                    style: str = "fsdp"):
+    """Pytree of NamedShardings matching ``params``."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        name = jax.tree_util.keystr(path)
+        spec = param_spec(cfg, mesh, name, getattr(leaf, "ndim", 0),
+                          style=style)
+        spec = sanitize(spec, tuple(leaf.shape), mesh)
+        specs.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def zero1_moment_shardings(cfg: ModelConfig, mesh: Mesh, params: Any):
+    """ZeRO-1 optimizer-state shardings: the param's TP spec plus "data"
+    on the first still-unsharded divisible axis (usually the stacked layer
+    axis)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    d = mesh.shape["data"]
+    for path, leaf in flat:
+        name = jax.tree_util.keystr(path)
+        spec = param_spec(cfg, mesh, name, getattr(leaf, "ndim", 0),
+                          style="zero1")
+        spec = list(sanitize(spec, tuple(leaf.shape), mesh))
+        for i in range(leaf.ndim):
+            if spec[i] is None and leaf.shape[i] % d == 0:
+                spec[i] = "data"
+                break
+        out.append(NamedSharding(mesh, P(*spec)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def cache_spec(cfg: ModelConfig, mesh: Mesh, path: str, shape) -> P:
+    """KV/state cache specs for the GSPMD decode path.
+
+    Batch over the data axes. The "model" axis goes to the kv-head dim when
+    divisible, else to the sequence dim (sequence-parallel KV), else the
+    leaf stays replicated over "model" — explicit jit argument shardings
+    require exact divisibility.
+    """
+    b = batch_axes(mesh)
+    tp = mesh.shape["model"]
+    key = _leaf_key(path)
+    nd = len(shape)
+    if key == "len":
+        return P()
+    if key == "latent":                      # (L, B, S, r) — MLA
+        s_ok = shape[2] % tp == 0
+        return P(None, b, "model" if s_ok else None, None)
+    if key == "state":                       # (L, B, nh, P, N)
+        h_ok = shape[2] % tp == 0
+        return P(None, b, "model" if h_ok else None, None, None)
+    if key == "conv":                        # (L, B, K-1, C)
+        c_ok = shape[3] % tp == 0
+        return P(None, b, None, "model" if c_ok else None)
+    if key == "h":                           # (G, B, w)
+        return P(None, b, "model" if shape[2] % tp == 0 else None)
+    if key in ("cross_k", "cross_v"):        # (L, B, F, hk, hd)
+        return P(None, b, None, None, None)
+    if nd == 5:                              # k/v (L, B, S, hk, hd)
+        if shape[3] % tp == 0:
+            return P(None, b, None, "model", None)
+        if shape[2] % tp == 0:
+            return P(None, b, "model", None, None)
+        return P(None, b, None, None, None)
+    if nd == 4:                              # int8 scales (L, B, S, hk)
+        if shape[3] % tp == 0:
+            return P(None, b, None, "model")
+        if shape[2] % tp == 0:
+            return P(None, b, "model", None)
+        return P(None, b, None, None)
+    return P()
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, cache: Any):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    out = []
+    for path, leaf in flat:
+        name = jax.tree_util.keystr(path)
+        spec = cache_spec(cfg, mesh, name, tuple(leaf.shape))
+        out.append(NamedSharding(mesh, sanitize(spec, tuple(leaf.shape),
+                                                mesh)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def data_sharding(mesh: Mesh, ndim: int, *, mrope: bool = False):
+    """Tokens/labels (B, S) — batch over pod+data. M-RoPE positions are
+    (3, B, S) with the batch on axis 1."""
+    b = batch_axes(mesh)
+    if mrope and ndim == 3:
+        return NamedSharding(mesh, P(None, b, None))
+    spec = [b] + [None] * (ndim - 1)
+    return NamedSharding(mesh, P(*spec))
+
+
+def embeds_sharding(mesh: Mesh):
+    """Frontend embeddings (B, F, d)."""
+    return NamedSharding(mesh, P(batch_axes(mesh), None, None))
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,17 @@
+import os
+import sys
+
+# A small 8-device CPU mesh for the distributed (shard_map ring) tests.
+# This must be set before jax is first imported anywhere in the test
+# process. The 512-device flag stays dry-run-only (launch/dryrun.py).
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

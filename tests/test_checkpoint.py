@@ -1,0 +1,54 @@
+"""Checkpoint/restore: roundtrip, integrity checks, manager rotation."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.runtime import checkpoint as C
+
+TREE = {"a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+        "b": {"c": jnp.ones((2,), jnp.bfloat16),
+              "d": jnp.asarray(3, jnp.int32)}}
+
+
+def test_roundtrip(tmp_path):
+    p = C.save(str(tmp_path / "x.npz"), TREE, step=7)
+    out = C.restore(p, jax.tree.map(jnp.zeros_like, TREE))
+    for a, b in zip(jax.tree.leaves(TREE), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    assert C.read_step(p) == 7
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    p = C.save(str(tmp_path / "x.npz"), TREE)
+    bad = dict(TREE)
+    bad["a"] = jnp.zeros((4, 4))
+    with pytest.raises(ValueError):
+        C.restore(p, bad)
+
+
+def test_leaf_count_mismatch_rejected(tmp_path):
+    p = C.save(str(tmp_path / "x.npz"), TREE)
+    with pytest.raises(ValueError):
+        C.restore(p, {"a": TREE["a"]})
+
+
+def test_no_tmp_residue(tmp_path):
+    C.save(str(tmp_path / "x.npz"), TREE)
+    assert [f for f in os.listdir(tmp_path) if f.endswith(".tmp")] == []
+
+
+def test_manager_rotation_and_resume(tmp_path):
+    mgr = C.CheckpointManager(str(tmp_path), keep=2)
+    assert mgr.latest() is None
+    for s in (1, 2, 3, 4):
+        tree = jax.tree.map(lambda x: x + s, TREE)
+        mgr.save(s, tree)
+    assert mgr.all_steps() == [3, 4]         # rotated
+    step, out = mgr.restore_latest(jax.tree.map(jnp.zeros_like, TREE))
+    assert step == 4
+    np.testing.assert_allclose(np.asarray(out["a"]),
+                               np.asarray(TREE["a"]) + 4)

@@ -1,0 +1,93 @@
+"""Elastic failover (stage loss -> re-plan) and device-subset selection
+(paper A.5): more devices is not always better; drags get dropped."""
+import dataclasses
+
+import pytest
+
+from repro.configs import get_config
+from repro.core import cluster, halda
+from repro.core.profiles import (GiB, OS, DeviceProfile, ModelProfile,
+                                 QUANTS, paper_table2_cluster,
+                                 paper_table2_extra, tpu_stage_cluster)
+from repro.runtime import elastic
+from repro.runtime.serve import RingPlan
+
+
+def model_70b():
+    return ModelProfile(
+        name="llama70b", n_layers=80, layer_bytes=0.48 * GiB,
+        input_bytes=0.27 * GiB, output_bytes=0.27 * GiB, embed_dim=8192,
+        vocab=128256, kv_heads=8, head_dim=128, n_kv=1024,
+        flops_layer={"q4k": 2 * 0.85e9},
+        flops_output={"q4k": 2 * 8192 * 128256})
+
+
+def test_fail_stages_replans():
+    cfg = get_config("mixtral-8x7b")
+    st = elastic.initial_state(cfg, 16, k=1)
+    assert st.plan.L_pad == 32 and st.plan.w == 2
+    st2 = elastic.fail_stages(st, cfg, [3])
+    assert len(st2.stages) == 15 and 3 not in st2.stages
+    assert st2.generation == 1
+    # plan still covers every layer
+    assert st2.plan.L_pad >= cfg.n_layers
+    assert st2.plan.w * st2.plan.k * len(st2.stages) == st2.plan.L_pad
+
+
+def test_fail_all_raises():
+    cfg = get_config("mixtral-8x7b")
+    st = elastic.initial_state(cfg, 4)
+    with pytest.raises(RuntimeError):
+        elastic.fail_stages(st, cfg, [0, 1, 2, 3])
+
+
+def test_resolve_heterogeneous_survivors():
+    devs = paper_table2_cluster()
+    sol = elastic.resolve_heterogeneous(devs[:3], model_70b())
+    assert sum(sol.w) * sol.k == 80
+    sched = elastic.remap_schedule(sol, 80)
+    assert sched.n_layers == 80
+
+
+def test_a5_more_devices_not_always_better():
+    """Adding the slow-disk Mac Air (D6) should not improve the cluster;
+    select_cluster must not pick a strictly worse superset."""
+    devs = paper_table2_cluster() + paper_table2_extra()
+    mp = model_70b()
+    all6 = halda.solve(devs, mp)
+    choice = cluster.select_cluster(devs, mp)
+    assert choice.solution.latency <= all6.latency + 1e-9
+    assert len(choice.history) >= 1
+
+
+def test_select_cluster_keeps_head():
+    devs = paper_table2_cluster()
+    mp = model_70b()
+    choice = cluster.select_cluster(devs, mp)
+    assert 0 in choice.devices
+
+
+def test_fail_and_resolve_drops_failed():
+    devs = paper_table2_cluster()
+    mp = model_70b()
+    sol = cluster.fail_and_resolve(devs, mp, failed=[1])
+    assert len(sol.w) == 3
+
+
+def test_tpu_stage_cluster_uniform():
+    devs = tpu_stage_cluster(16)
+    mp = model_70b()
+    sol = halda.solve(devs, mp)
+    assert len(set(sol.w)) == 1          # homogeneous stages, equal windows
+
+
+def test_straggler_gets_smaller_window():
+    """Heterogeneous throughput -> Halda shrinks the slow stage's window
+    (straggler mitigation via the scheduler)."""
+    devs = tpu_stage_cluster(4)
+    slow = dataclasses.replace(
+        devs[2], name="slow",
+        gpu_flops={q: v * 0.25 for q, v in devs[2].gpu_flops.items()})
+    devs = [devs[0], devs[1], slow, devs[3]]
+    sol = halda.solve(devs, model_70b())
+    assert sol.w[2] <= min(sol.w[0], sol.w[1], sol.w[3])

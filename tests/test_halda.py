@@ -1,0 +1,127 @@
+"""Halda scheduler: optimality vs brute force, solver-backend agreement,
+feasibility on random clusters, and the paper-cluster structure."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import baselines, halda
+from repro.core.latency import classify_device, token_latency
+from repro.core.profiles import (GiB, OS, Case, DeviceProfile, ModelProfile,
+                                 QUANTS, divisors, paper_table2_cluster)
+
+
+def small_model(n_layers=12, layer_gib=0.4, n_kv=256) -> ModelProfile:
+    return ModelProfile(
+        name="m", n_layers=n_layers, layer_bytes=layer_gib * GiB,
+        input_bytes=0.2 * GiB, output_bytes=0.2 * GiB, embed_dim=4096,
+        vocab=32000, kv_heads=8, head_dim=128, n_kv=n_kv,
+        flops_layer={"q4k": 2 * layer_gib * GiB / 0.5625},
+        flops_output={"q4k": 2 * 4096 * 32000})
+
+
+def linux_dev(name, ram_gib, flops, disk_gbps, vram_gib=0.0):
+    return DeviceProfile(
+        name=name, os=OS.LINUX, ram_avail=ram_gib * GiB,
+        vram_avail=vram_gib * GiB, has_cuda=vram_gib > 0,
+        cpu_flops={q: flops for q in QUANTS},
+        gpu_flops={q: flops * 8 for q in QUANTS} if vram_gib else {},
+        cpu_membw=30e9, gpu_membw=300e9 if vram_gib else 0.0,
+        disk_seq_bps=disk_gbps * 1e9, disk_rand_bps=disk_gbps * 0.6e9,
+        t_comm=1e-3)
+
+
+def test_divisors():
+    assert divisors(12) == [1, 2, 3, 4, 6]
+    assert divisors(12, exclude_self=False) == [1, 2, 3, 4, 6, 12]
+    assert divisors(1) == [1]
+
+
+def test_single_device_degenerates_to_llamacpp():
+    devs = [linux_dev("a", 32, 200e9, 3.0, vram_gib=8)]
+    mp = small_model()
+    sol = halda.solve(devs, mp)
+    assert sol.w == [mp.n_layers]
+    assert sol.k == 1
+
+
+def test_halda_beats_or_matches_baselines_on_paper_cluster():
+    devs = paper_table2_cluster()
+    mp = small_model(n_layers=80, layer_gib=0.48, n_kv=1024)
+    sol = halda.solve(devs, mp)
+    for name, strat in baselines.STRATEGIES.items():
+        base = strat(devs, mp)
+        assert sol.latency <= base.latency * 1.001, (name, sol, base)
+
+
+def test_exact_improves_on_stuck_alg1():
+    """The published calibration step cannot fire when all GPUs are full;
+    the exact case enumeration must not be worse."""
+    devs = paper_table2_cluster()
+    mp = small_model(n_layers=80, layer_gib=0.48, n_kv=1024)
+    alg1 = halda.solve(devs, mp, paper_faithful=True)
+    exact = halda.solve(devs, mp)
+    assert exact.latency <= alg1.latency + 1e-9
+
+
+def test_exact_matches_brute_force_small():
+    devs = [linux_dev("a", 3, 100e9, 2.0, vram_gib=2),
+            linux_dev("b", 6, 300e9, 3.0)]
+    mp = small_model(n_layers=8, layer_gib=0.5)
+    bf = halda.brute_force(devs, mp)
+    sol = halda.solve(devs, mp)
+    assert sol.latency <= bf.latency * 1.05, (sol, bf)
+
+
+def test_solver_backends_agree():
+    devs = [linux_dev("a", 4, 100e9, 2.0, vram_gib=3),
+            linux_dev("b", 8, 250e9, 3.0)]
+    mp = small_model(n_layers=12, layer_gib=0.45)
+    s1 = halda.solve(devs, mp)
+    s2 = halda.solve(devs, mp, force_fallback=True)
+    assert abs(s1.latency - s2.latency) <= 1e-6 * max(s1.latency, 1e-9)
+
+
+def test_homogeneous_cluster_uniform_windows():
+    devs = [linux_dev(f"d{i}", 16, 200e9, 2.5) for i in range(4)]
+    mp = small_model(n_layers=12, layer_gib=0.1)
+    sol = halda.solve(devs, mp)
+    assert len(set(sol.w)) == 1, sol.w
+
+
+def test_slow_disk_device_forced_m4():
+    slow = linux_dev("slow", 2, 50e9, 0.1)     # below threshold
+    assert classify_device(slow, 1, small_model(), 6, 0, 2) == Case.M4
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 4), st.integers(0, 10_000))
+def test_halda_feasible_on_random_clusters(m, seed):
+    rng = np.random.default_rng(seed)
+    devs = []
+    for i in range(m):
+        vram = float(rng.choice([0, 0, 4, 8]))
+        devs.append(linux_dev(f"d{i}", float(rng.uniform(2, 16)),
+                              float(rng.uniform(50e9, 400e9)),
+                              float(rng.uniform(0.5, 4.0)), vram_gib=vram))
+    L = int(rng.choice([8, 12, 16, 24]))
+    mp = small_model(n_layers=L, layer_gib=float(rng.uniform(0.1, 0.6)))
+    sol = halda.solve(devs, mp)
+    # feasibility invariants
+    assert sum(sol.w) * sol.k == L or sum(sol.w) == L  # Assumption 1
+    assert all(w >= 1 for w in sol.w)
+    assert all(0 <= n <= w for n, w in zip(sol.n, sol.w))
+    assert math.isfinite(sol.latency) and sol.latency > 0
+    # objective consistency: reported latency == analytic latency
+    lat = token_latency(devs, mp, sol.w, sol.n, sol.cases)
+    assert abs(lat - sol.latency) < 1e-9 + 1e-6 * lat
+
+
+def test_gpu_preferred_when_fast():
+    devs = [linux_dev("gpu", 16, 100e9, 3.0, vram_gib=8),
+            linux_dev("cpu", 16, 100e9, 3.0)]
+    mp = small_model(n_layers=12, layer_gib=0.2)
+    sol = halda.solve(devs, mp)
+    assert sol.n[0] > 0          # layers land on the fast GPU
+    assert sol.w[0] >= sol.w[1]  # and the GPU device carries more

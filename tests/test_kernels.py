@@ -1,0 +1,107 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret=True
+executes the kernel body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_decode import flash_decode
+from repro.kernels.q4_matmul import q4_matmul
+from repro.kernels.ssd_scan import ssd_scan
+from repro.quant import quantize_q4
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("M,K,N,bm,bn,bk", [
+    (128, 256, 256, 128, 128, 128),
+    (256, 512, 512, 128, 256, 256),
+    (64, 128, 384, 64, 128, 64),
+    (256, 1024, 128, 256, 128, 512),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_q4_matmul_sweep(M, K, N, bm, bn, bk, dtype):
+    x = jax.random.normal(KEY, (M, K), dtype)
+    w = jax.random.normal(jax.random.PRNGKey(1), (K, N))
+    qt = quantize_q4(w)
+    out = q4_matmul(x, qt.packed, qt.scale, block_m=bm, block_n=bn,
+                    block_k=bk, interpret=True)
+    want = ref.q4_matmul_ref(x, qt.packed, qt.scale)
+    tol = 1e-3 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=tol, atol=tol * np.abs(want).max())
+
+
+@pytest.mark.parametrize("B,H,hkv,D,S,bs", [
+    (2, 8, 2, 64, 512, 128),
+    (1, 4, 4, 128, 1024, 256),   # MHA
+    (3, 8, 1, 64, 256, 256),     # MQA
+    (2, 16, 2, 32, 512, 512),
+])
+@pytest.mark.parametrize("window", [None, 128])
+def test_flash_decode_sweep(B, H, hkv, D, S, bs, window):
+    q = jax.random.normal(KEY, (B, H, D))
+    k = jax.random.normal(jax.random.PRNGKey(2), (B, S, hkv, D))
+    v = jax.random.normal(jax.random.PRNGKey(3), (B, S, hkv, D))
+    kv_len = jnp.asarray(
+        np.random.default_rng(0).integers(1, S + 1, size=B), jnp.int32)
+    out = flash_decode(q, k, v, kv_len, window=window, block_s=bs,
+                       interpret=True)
+    want = ref.flash_decode_ref(q, k, v, kv_len, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_decode_dtypes(dtype):
+    B, H, hkv, D, S = 2, 8, 2, 64, 512
+    q = jax.random.normal(KEY, (B, H, D), dtype)
+    k = jax.random.normal(jax.random.PRNGKey(2), (B, S, hkv, D), dtype)
+    v = jax.random.normal(jax.random.PRNGKey(3), (B, S, hkv, D), dtype)
+    kv_len = jnp.full((B,), S, jnp.int32)
+    out = flash_decode(q, k, v, kv_len, block_s=256, interpret=True)
+    want = ref.flash_decode_ref(q, k, v, kv_len)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("B,S,nh,P,N,chunk", [
+    (2, 256, 4, 32, 64, 64),
+    (1, 128, 2, 64, 128, 128),
+    (2, 512, 8, 16, 32, 128),
+    (1, 192, 3, 32, 64, 64),     # S not a multiple of a power of two
+])
+def test_ssd_scan_sweep(B, S, nh, P, N, chunk):
+    if S % chunk:
+        pytest.skip("kernel requires S % chunk == 0")
+    x = jax.random.normal(KEY, (B, S, nh, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(4),
+                                           (B, S, nh)))
+    A = -jnp.exp(jax.random.normal(jax.random.PRNGKey(5), (nh,)) * 0.3)
+    Bm = jax.random.normal(jax.random.PRNGKey(6), (B, S, N)) * 0.3
+    Cm = jax.random.normal(jax.random.PRNGKey(7), (B, S, N)) * 0.3
+    y, h = ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, interpret=True)
+    y_ref, h_ref = ref.ssd_sequential_ref(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_chunked_jnp_vs_sequential():
+    """The model-layer chunked scan (used in training) against the O(S)
+    recurrence."""
+    B, S, nh, P, N = 2, 200, 4, 16, 32
+    x = jax.random.normal(KEY, (B, S, nh, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(4),
+                                           (B, S, nh)))
+    A = -jnp.exp(jax.random.normal(jax.random.PRNGKey(5), (nh,)) * 0.3)
+    Bm = jax.random.normal(jax.random.PRNGKey(6), (B, S, N)) * 0.3
+    Cm = jax.random.normal(jax.random.PRNGKey(7), (B, S, N)) * 0.3
+    y_c, h_c = ref.ssd_scan_ref(x, dt, A, Bm, Cm, chunk=64)
+    y_r, h_r = ref.ssd_sequential_ref(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y_c), np.asarray(y_r),
+                               rtol=2e-4, atol=2e-4)

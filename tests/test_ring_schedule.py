@@ -1,0 +1,53 @@
+"""Ring schedule construction + the SPMD ring permutation."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ring import build_schedule, validate_schedule
+from repro.runtime.serve import padded_layers, ring_permutation
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 5), st.integers(1, 4), st.data())
+def test_schedule_bijective(m, k, data):
+    w = [data.draw(st.integers(1, 4)) for _ in range(m)]
+    W = sum(w)
+    L = W * k
+    n = [data.draw(st.integers(0, wi)) for wi in w]
+    s = build_schedule(w, n, L)
+    validate_schedule(s)                       # every layer exactly once
+    assert s.k == k
+    assert len(s.windows) == k * m
+
+
+def test_schedule_rejects_nondivisible():
+    with pytest.raises(ValueError):
+        build_schedule([2, 3], [0, 0], 11)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 64), st.sampled_from([1, 2, 4, 8, 16]),
+       st.sampled_from([1, 2, 4]))
+def test_ring_permutation_bijection(L, M, k):
+    L_pad = padded_layers(L, M)
+    per_stage = L_pad // M
+    if per_stage % k:
+        return
+    perm = ring_permutation(L_pad, M, k)
+    assert sorted(perm.tolist()) == list(range(L_pad))
+    # stage m's block holds windows {r*M + m}: consecutive rows within a
+    # window are consecutive layers
+    w = L_pad // (M * k)
+    for m in range(M):
+        blk = perm[m * k * w:(m + 1) * k * w]
+        for r in range(k):
+            win = blk[r * w:(r + 1) * w]
+            assert list(np.diff(win)) == [1] * (w - 1)
+            assert win[0] == (r * M + m) * w
+
+
+def test_padded_layers():
+    assert padded_layers(32, 16) == 32
+    assert padded_layers(62, 16) == 64
+    assert padded_layers(38, 16) == 48
+    assert padded_layers(4, 16) == 16

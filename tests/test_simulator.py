@@ -1,0 +1,103 @@
+"""Event-driven simulator: reproduces the paper's qualitative claims."""
+import numpy as np
+import pytest
+
+from repro.core.profiles import (GiB, OS, DeviceProfile, ModelProfile,
+                                 QUANTS)
+from repro.core.simulator import simulate_ring, simulate_tp
+from repro.core.latency import _sum_q
+
+
+def uniform_cluster(n=4, ram_gib=8.0, disk=2e9):
+    return [DeviceProfile(name=f"L{i}", os=OS.LINUX, ram_avail=ram_gib * GiB,
+                          cpu_flops={q: 200e9 for q in QUANTS},
+                          cpu_membw=30e9, disk_seq_bps=disk,
+                          disk_rand_bps=disk / 2, t_comm=2e-3)
+            for i in range(n)]
+
+
+def model(n_layers, layer_gib):
+    return ModelProfile(
+        name="m", n_layers=n_layers, layer_bytes=layer_gib * GiB,
+        input_bytes=0.25 * GiB, output_bytes=0.25 * GiB, embed_dim=8192,
+        vocab=32000, kv_heads=8, head_dim=128, n_kv=1024,
+        flops_layer={"q4k": 2 * layer_gib * GiB / 0.5625},
+        flops_output={"q4k": 2 * 8192 * 32000})
+
+
+def test_fig2_insufficient_memory_prefers_k_gt_1():
+    """Paper Fig. 2: with insufficient memory, piped-ring (k>1) roughly
+    halves latency or better vs k=1 (prefetch-release regime)."""
+    devs = uniform_cluster()
+    mp = model(80, 0.48)               # 38 GiB > 32 GiB cluster RAM
+    lat = {}
+    for k in (1, 2, 4):
+        w = [80 // (4 * k)] * 4
+        lat[k] = simulate_ring(devs, mp, w, [0] * 4).token_latency
+    assert lat[2] < 0.6 * lat[1]
+    assert lat[4] < 0.8 * lat[1]
+
+
+def test_fig2_sufficient_memory_prefers_k_1():
+    devs = uniform_cluster()
+    mp = model(60, 0.40)               # 24 GiB < 32 GiB: fits
+    w1 = simulate_ring(devs, mp, [15] * 4, [0] * 4).token_latency
+    w5 = simulate_ring(devs, mp, [3] * 4, [0] * 4).token_latency
+    assert w5 >= w1                     # fragmentation overhead only
+    assert w5 <= w1 * 1.2               # and it is mild
+
+
+def test_prefetch_reduces_latency_under_overload():
+    devs = uniform_cluster()
+    mp = model(80, 0.48)
+    w = [10] * 4
+    with_pf = simulate_ring(devs, mp, w, [0] * 4, prefetch=True)
+    without = simulate_ring(devs, mp, w, [0] * 4, prefetch=False)
+    assert with_pf.token_latency <= without.token_latency
+    # paper reports 9-17%; accept any strictly positive overlap
+    assert with_pf.token_latency < without.token_latency
+
+
+def test_prefetch_noop_when_memory_sufficient():
+    devs = uniform_cluster()
+    mp = model(60, 0.4)
+    w = [15] * 4
+    a = simulate_ring(devs, mp, w, [0] * 4, prefetch=True)
+    b = simulate_ring(devs, mp, w, [0] * 4, prefetch=False)
+    assert a.token_latency == pytest.approx(b.token_latency, rel=1e-6)
+
+
+def test_simulator_not_below_compute_lower_bound():
+    devs = uniform_cluster()
+    mp = model(16, 0.1)
+    w = [4] * 4
+    res = simulate_ring(devs, mp, w, [0] * 4)
+    per_layer = _sum_q(mp.flops_layer, devs[0].cpu_flops)
+    lower = mp.n_layers * per_layer     # compute only, zero comm/disk
+    assert res.token_latency >= lower * 0.99
+
+
+def test_resident_weights_oom_and_pressure():
+    devs = uniform_cluster(ram_gib=2.0)
+    mp = model(80, 0.48)                # 38 GiB into 8 GiB: hopeless
+    res = simulate_ring(devs, mp, [20] * 4, [0] * 4, resident_weights=True)
+    assert res.oom
+    assert max(res.memory_pressure.values()) > 0.5
+    # mmap path on the same cluster: low pressure, no OOM
+    res2 = simulate_ring(devs, mp, [20] * 4, [0] * 4)
+    assert not res2.oom
+    assert max(res2.memory_pressure.values()) < 0.3
+
+
+def test_tp_slower_than_ring_on_wifi():
+    """dllama-style TP pays two all-reduces every layer over slow Wi-Fi
+    links (RTT ~8 ms); the ring pays M hops per round in total."""
+    devs = [DeviceProfile(name=f"L{i}", os=OS.LINUX, ram_avail=8 * GiB,
+                          cpu_flops={q: 200e9 for q in QUANTS},
+                          cpu_membw=30e9, disk_seq_bps=2e9,
+                          disk_rand_bps=1e9, t_comm=8e-3)
+            for i in range(4)]
+    mp = model(32, 0.2)
+    ring = simulate_ring(devs, mp, [8] * 4, [0] * 4)
+    tp = simulate_tp(devs, mp)
+    assert tp.token_latency > ring.token_latency
