@@ -1,10 +1,25 @@
 """Shared helpers for the benchmark suite. Every benchmark prints CSV rows
-``name,value,derived`` so ``run.py`` output is machine-readable."""
+``name,value,derived`` so ``run.py`` output is machine-readable, and
+sections that return a payload dict get it persisted as
+``BENCH_<name>.json`` at the repo root (the cross-PR perf trajectory)."""
 from __future__ import annotations
 
+import json
+import os
 import sys
 import time
 from contextlib import contextmanager
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def write_bench_json(name: str, payload: dict) -> str:
+    """Write ``BENCH_<name>.json`` at the repo root; returns the path."""
+    path = os.path.join(REPO_ROOT, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
 
 
 def row(name: str, value, derived: str = "") -> None:

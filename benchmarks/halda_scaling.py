@@ -29,13 +29,14 @@ def rand_cluster(m, seed=0):
     return out
 
 
-def main() -> None:
+def main() -> dict:
     header("Halda scaling: solve time vs M")
     mp = ModelProfile(
         name="m", n_layers=80, layer_bytes=0.48 * GiB,
         input_bytes=0.25 * GiB, output_bytes=0.25 * GiB, embed_dim=8192,
         vocab=32000, kv_heads=8, head_dim=128, n_kv=1024,
         flops_layer={"q4k": 1.7e9}, flops_output={"q4k": 5.2e8})
+    payload = {}
     for m in (2, 4, 6, 8, 12, 16):
         devs = rand_cluster(m)
         t0 = time.perf_counter()
@@ -43,6 +44,9 @@ def main() -> None:
         dt = time.perf_counter() - t0
         row(f"halda/M={m}", f"{dt * 1e3:.0f}ms",
             f"lat={sol.latency * 1e3:.0f}ms k={sol.k}")
+        payload[f"M={m}"] = {"solve_ms": dt * 1e3,
+                             "latency_ms": sol.latency * 1e3, "k": sol.k}
+    return payload
 
 
 if __name__ == "__main__":

@@ -51,6 +51,21 @@ def main() -> None:
     row("kernel/flash_decode_vmem", f"{vmem / 1024:.0f}KiB",
         f"block_s={bs}")
 
+    # multi-query verify: T positions per pass vs T single-position passes
+    f1 = jax.jit(lambda *a: ref.flash_decode_ref(*a))
+    dt_1 = time_fn(f1, q, k, v, kv_len)
+    for T in (4, 8):
+        qv = jax.random.normal(key, (B, T, H, D), jnp.bfloat16)
+        fv = jax.jit(lambda *a: ref.flash_verify_ref(*a))
+        dt_v = time_fn(fv, qv, k, v, kv_len)
+        row(f"kernel/flash_verify_ref_T{T}", f"{dt_v * 1e6:.0f}us",
+            f"{T}pos for {dt_v / dt_1:.2f}x one pass "
+            f"(amortization {T * dt_1 / dt_v:.1f}x)")
+    n_rep = H // hkv
+    vmem = 2 * 512 * D * 2 + 8 * n_rep * D * (2 + 4)
+    row("kernel/flash_verify_vmem", f"{vmem / 1024:.0f}KiB",
+        "block_s=512 T=8")
+
     # ssd scan
     Bs, S2, nh, P, Nd = 4, 2048, 8, 64, 128
     xs = jax.random.normal(key, (Bs, S2, nh, P)) * 0.5

@@ -2,6 +2,10 @@
 
   PYTHONPATH=src python -m benchmarks.run           # everything
   PYTHONPATH=src python -m benchmarks.run table3    # one section
+
+Sections whose ``main()`` returns a payload dict get it persisted as
+``BENCH_<section>.json`` at the repo root — the machine-readable perf
+trajectory across PRs (tokens/s, ms/token, config per scenario).
 """
 from __future__ import annotations
 
@@ -11,7 +15,16 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 SECTIONS = ("table3", "table4", "table6", "fig2", "fig8", "halda",
-            "kernels", "roofline")
+            "kernels", "spec_decode", "roofline")
+
+
+def _run_section(name: str, fn) -> None:
+    from . import common
+
+    payload = fn()
+    if isinstance(payload, dict) and payload:
+        path = common.write_bench_json(name, payload)
+        print(f"# wrote {path}", flush=True)
 
 
 def main(argv=None) -> int:
@@ -20,29 +33,32 @@ def main(argv=None) -> int:
 
     if "table3" in wanted:
         from . import table3_latency
-        table3_latency.main()
+        _run_section("table3", table3_latency.main)
     if "table4" in wanted:
         from . import table4_memory
-        table4_memory.main()
+        _run_section("table4", table4_memory.main)
     if "table6" in wanted:
         from . import table6_models
-        table6_models.main()
+        _run_section("table6", table6_models.main)
     if "fig2" in wanted:
         from . import fig2_ring
-        fig2_ring.main()
+        _run_section("fig2", fig2_ring.main)
     if "fig8" in wanted:
         from . import fig8_devices
-        fig8_devices.main()
+        _run_section("fig8", fig8_devices.main)
     if "halda" in wanted:
         from . import halda_scaling
-        halda_scaling.main()
+        _run_section("halda", halda_scaling.main)
     if "kernels" in wanted:
         from . import kernel_micro
-        kernel_micro.main()
+        _run_section("kernels", kernel_micro.main)
+    if "spec_decode" in wanted:
+        from . import spec_decode
+        _run_section("spec_decode", spec_decode.main)
     if "roofline" in wanted:
         from . import roofline
         try:
-            roofline.main()
+            _run_section("roofline", roofline.main)
         except FileNotFoundError:
             print("roofline: dryrun_results.json not found — run "
                   "`python -m repro.launch.dryrun --all` first")

@@ -61,7 +61,7 @@ SYSTEMS = ["llama.cpp", "exo", "dllama", "prima(w/o halda)",
            "prima(w/o prefetch)", "prima"]
 
 
-def main() -> None:
+def main() -> dict:
     header("Table 3: token latency / TTFT (ms), Table-2 cluster")
     devs = paper_table2_cluster()
     results = {}
@@ -98,6 +98,11 @@ def main() -> None:
         p = results[(label, "prima")][0]
         row(f"claim/C4/{label}/prefetch-helps", np_ >= p,
             f"gain={100 * (np_ - p) / max(np_, 1e-9):.1f}%")
+
+    return {f"{label}/{system}": {"ms_per_token": lat * 1e3,
+                                  "tps": (0.0 if oom else 1.0 / lat),
+                                  "ttft_ms": t * 1e3, "oom": oom}
+            for (label, system), (lat, t, oom) in results.items()}
 
 
 if __name__ == "__main__":

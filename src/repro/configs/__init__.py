@@ -4,8 +4,8 @@ from .base import SHAPES, ModelConfig, ShapeSpec, get_config, list_archs
 
 # importing the modules populates the registry
 from . import (llama_paper, mamba2_780m, minicpm3, minitron_8b, mixtral,
-               phi35_moe, qwen15_32b, qwen25_14b, qwen2_vl_2b,
-               recurrentgemma_9b, whisper_tiny)
+               phi35_moe, qwen15_05b_draft, qwen15_32b, qwen25_14b,
+               qwen2_vl_2b, recurrentgemma_9b, whisper_tiny)
 
 #: The ten assigned architectures (dry-run / roofline cells).
 ASSIGNED_ARCHS = (

@@ -16,7 +16,8 @@ import dataclasses
 import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from .latency import _sum_q, classify_device, device_coeffs
+from .latency import (_sum_q, classify_device, device_coeffs,
+                      expected_tokens_per_cycle)
 from .profiles import Case, DeviceProfile, ModelProfile, OS
 from .ring import RingSchedule, build_schedule
 
@@ -64,21 +65,30 @@ def _window_compute_time(dev: DeviceProfile, model: ModelProfile,
     return t
 
 
-def _head_output_time(dev: DeviceProfile, model: ModelProfile) -> float:
-    return (_sum_q(model.flops_output, dev.cpu_flops)
+def _head_output_time(dev: DeviceProfile, model: ModelProfile,
+                      seq: int = 1) -> float:
+    """lm-head time; ``seq`` positions need logits per verify pass (the
+    head weights stream once — only the matmul FLOPs scale)."""
+    return (seq * _sum_q(model.flops_output, dev.cpu_flops)
             + model.head_extra_bytes() / dev.cpu_membw)
 
 
 def simulate_ring(devices: Sequence[DeviceProfile], model: ModelProfile,
                   w: Sequence[int], n: Sequence[int], *,
                   prefetch: bool = True, n_tokens: int = 8,
-                  prompt_len: int = 16, resident_weights: bool = False
-                  ) -> SimResult:
+                  prompt_len: int = 16, resident_weights: bool = False,
+                  decode_seq: int = 1) -> SimResult:
     """Simulate piped-ring decode for an assignment.
 
     ``resident_weights=True`` models systems that keep weights in mem_used
     (exo/dllama): no mmap reclaim (no disk loads) but OOM when the shard
     exceeds device memory, and full memory pressure.
+
+    ``decode_seq``: tokens scored per decode pass (1 = ordinary decode;
+    gamma+1 = a speculative verify pass). Compute and KV terms scale with
+    it; weight streaming — RAM *and* disk — is per pass, which is the
+    whole speculative amortization. The returned ``token_latency`` is then
+    seconds per *pass*, not per emitted token (see ``simulate_speculative``).
     """
     sched = build_schedule(w, n, model.n_layers)
     active = sorted({win.device for win in sched.windows})
@@ -136,7 +146,7 @@ def simulate_ring(devices: Sequence[DeviceProfile], model: ModelProfile,
     t_clock = 0.0
 
     for tok in range(n_tokens):
-        seq = prompt_len if tok == 0 else 1
+        seq = prompt_len if tok == 0 else decode_seq
         arrival = t_clock
         for win in sched.windows:
             m = win.device
@@ -185,10 +195,12 @@ def simulate_ring(devices: Sequence[DeviceProfile], model: ModelProfile,
                                            and not st.resident_ok) else -1.0
             arrival = done + dev.t_comm
 
-        # output layer back on the head device
+        # output layer back on the head device (prefill emits one logit
+        # row; a decode pass emits decode_seq of them)
         head_dev = devices[head]
         arrival = max(arrival, states[head].prev_done)
-        out_done = arrival + _head_output_time(head_dev, model)
+        out_done = arrival + _head_output_time(
+            head_dev, model, 1 if tok == 0 else decode_seq)
         states[head].prev_done = out_done
         completions.append(out_done)
         t_clock = out_done
@@ -205,6 +217,53 @@ def simulate_ring(devices: Sequence[DeviceProfile], model: ModelProfile,
     return SimResult(token_latency=steady, ttft=completions[0], oom=oom,
                      per_device_busy=busy, per_device_disk=disk,
                      memory_pressure=pressure)
+
+
+@dataclasses.dataclass
+class SpecSimResult:
+    """Speculative-decoding timeline result (per *emitted* token)."""
+
+    token_latency: float            # expected seconds per emitted token
+    tps: float                      # expected emitted tokens/s
+    cycle_latency: float            # verify pass + draft steps
+    verify_latency: float           # ring pass scoring gamma+1 positions
+    draft_latency: float            # gamma+1 draft decodes per cycle
+    tokens_per_cycle: float         # E[emitted] at the acceptance rate
+    base: SimResult                 # underlying ring simulation (per pass)
+
+    @property
+    def token_latency_ms(self) -> float:
+        return self.token_latency * 1e3
+
+
+def simulate_speculative(devices: Sequence[DeviceProfile],
+                         model: ModelProfile, w: Sequence[int],
+                         n: Sequence[int], *, gamma: int,
+                         acceptance: float, draft_token_latency: float,
+                         prefetch: bool = True, n_cycles: int = 8,
+                         prompt_len: int = 16) -> SpecSimResult:
+    """Speculative decode on the ring timeline.
+
+    Each cycle runs gamma+1 draft decodes (resident on the head device —
+    ``draft_token_latency`` per step, measured or modelled separately) and
+    ONE (gamma+1)-token verify pass through the pipelined ring; the pass
+    streams each window's weights once, so its cost is far below gamma+1
+    single-token passes on these disk/bandwidth-bound clusters. Emitted
+    tokens per cycle follow the acceptance model
+    (``expected_tokens_per_cycle``); the effective TPOT divides the cycle
+    time by it.
+    """
+    base = simulate_ring(devices, model, w, n, prefetch=prefetch,
+                         n_tokens=n_cycles, prompt_len=prompt_len,
+                         decode_seq=gamma + 1)
+    e = expected_tokens_per_cycle(acceptance, gamma)
+    t_draft = (gamma + 1) * draft_token_latency
+    cycle = base.token_latency + t_draft
+    return SpecSimResult(token_latency=cycle / e, tps=e / cycle,
+                         cycle_latency=cycle,
+                         verify_latency=base.token_latency,
+                         draft_latency=t_draft, tokens_per_cycle=e,
+                         base=base)
 
 
 def simulate_tp(devices: Sequence[DeviceProfile], model: ModelProfile, *,

@@ -1,15 +1,20 @@
-"""Pallas TPU kernel: decode attention (one query position per sequence).
+"""Pallas TPU kernel: decode/verify attention (T >= 1 query positions).
+
+One kernel serves both ordinary decode (T = 1) and the speculative
+multi-token verify pass (T = gamma + 1 draft positions scored against
+the KV cache with causal masking among the drafts).
 
 Grid (B, h_kv, S/bs): each program handles one (batch, kv-head) pair and
-one KV chunk; the GQA query group (n_rep heads) rides along in the block.
-Online softmax keeps running (m, l, acc) in VMEM scratch across the
-sequential KV-chunk axis; ``kv_len`` arrives via scalar prefetch so chunk
-masking (and the optional sliding window) uses real lengths.
+one KV chunk; the q tile flattens (draft position, GQA rep) into
+T*n_rep rows. Online softmax keeps running (m, l, acc) in VMEM scratch
+across the sequential KV-chunk axis; ``kv_len`` arrives via scalar
+prefetch so chunk masking (and the optional sliding window) uses real
+lengths.
 
-Block working set (bs=512, n_rep=8, D=128):
+Block working set (bs=512, T=8, n_rep=8, D=128):
   k/v tiles 2 * 512*128*2  = 256 KiB
-  q tile    8*128*2        = 2 KiB
-  acc       8*128*4        = 4 KiB
+  q tile    64*128*2       = 16 KiB
+  acc       64*128*4       = 32 KiB
 """
 from __future__ import annotations
 
@@ -23,8 +28,15 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(kv_len_ref, q_ref, k_ref, v_ref, out_ref, acc_ref, m_ref, l_ref,
-            *, block_s: int, window: Optional[int], n_chunks: int):
+def _verify_kernel(kv_len_ref, q_ref, k_ref, v_ref, out_ref, acc_ref, m_ref,
+                   l_ref, *, block_s: int, window: Optional[int],
+                   n_chunks: int, n_draft: int, n_rep: int):
+    """Multi-query verify: rows of the q tile flatten (draft t, GQA rep).
+
+    Query t's absolute position is ``kv_len - n_draft + t`` (``kv_len``
+    includes the draft block), giving causal masking among the draft
+    tokens: row (t, rep) sees cache positions <= kv_len - n_draft + t.
+    """
     b = pl.program_id(0)
     s_idx = pl.program_id(2)
 
@@ -34,23 +46,26 @@ def _kernel(kv_len_ref, q_ref, k_ref, v_ref, out_ref, acc_ref, m_ref, l_ref,
         m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
         l_ref[...] = jnp.zeros_like(l_ref)
 
-    q = q_ref[0, 0]                                  # (n_rep, D)
+    rows = n_draft * n_rep
+    q = q_ref[0, 0]                                  # (rows, D)
     k = k_ref[0, 0]                                  # (bs, D)
     v = v_ref[0, 0]
     kv_len = kv_len_ref[b]
 
     scale = 1.0 / math.sqrt(q.shape[-1])
     s = jnp.dot(q.astype(jnp.float32) * scale, k.astype(jnp.float32).T,
-                preferred_element_type=jnp.float32)  # (n_rep, bs)
+                preferred_element_type=jnp.float32)  # (rows, bs)
 
     pos = s_idx * block_s + jax.lax.broadcasted_iota(jnp.int32,
                                                      (1, block_s), 1)
-    mask = pos < kv_len
+    t_row = jax.lax.broadcasted_iota(jnp.int32, (rows, 1), 0) // n_rep
+    qpos = kv_len - n_draft + t_row                  # (rows, 1)
+    mask = pos <= qpos                               # (rows, bs)
     if window is not None:
-        mask &= pos >= (kv_len - window)
+        mask &= pos > (qpos - window)
     s = jnp.where(mask, s, -jnp.inf)
 
-    m_prev = m_ref[...]                              # (n_rep, 1)
+    m_prev = m_ref[...]                              # (rows, 1)
     m_cur = jnp.max(s, axis=-1, keepdims=True)
     m_new = jnp.maximum(m_prev, m_cur)
     m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
@@ -71,42 +86,67 @@ def _kernel(kv_len_ref, q_ref, k_ref, v_ref, out_ref, acc_ref, m_ref, l_ref,
 
 @functools.partial(jax.jit, static_argnames=("window", "block_s",
                                              "interpret"))
-def flash_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+def flash_verify(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                  kv_len: jnp.ndarray, *, window: Optional[int] = None,
                  block_s: int = 512, interpret: bool = False) -> jnp.ndarray:
-    """q: (B, H, D); k/v: (B, S, h_kv, D); kv_len: (B,) -> out (B, H, D)."""
-    B, H, D = q.shape
+    """q: (B, T, H, D); k/v: (B, S, h_kv, D); kv_len: (B,) -> (B, T, H, D).
+
+    Scores T draft positions against the KV cache in one pass. ``kv_len``
+    counts valid cache entries *including* the T draft tokens (which the
+    caller has already written at positions kv_len-T .. kv_len-1), so the
+    T = 1 case is ordinary decode attention.
+    """
+    B, T, H, D = q.shape
     S, h_kv = k.shape[1], k.shape[2]
     n_rep = H // h_kv
+    rows = T * n_rep
     bs = min(block_s, S)
     assert S % bs == 0, (S, bs)
     n_chunks = S // bs
-    qg = q.reshape(B, h_kv, n_rep, D)
+    # (B, h_kv, T*n_rep, D) with row = t * n_rep + rep
+    qg = q.reshape(B, T, h_kv, n_rep, D).transpose(0, 2, 1, 3, 4) \
+        .reshape(B, h_kv, rows, D)
     kt = k.transpose(0, 2, 1, 3)                     # (B, h_kv, S, D)
     vt = v.transpose(0, 2, 1, 3)
 
     grid = (B, h_kv, n_chunks)
     out = pl.pallas_call(
-        functools.partial(_kernel, block_s=bs, window=window,
-                          n_chunks=n_chunks),
+        functools.partial(_verify_kernel, block_s=bs, window=window,
+                          n_chunks=n_chunks, n_draft=T, n_rep=n_rep),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=grid,
             in_specs=[
-                pl.BlockSpec((1, 1, n_rep, D),
+                pl.BlockSpec((1, 1, rows, D),
                              lambda b, h, s, *_: (b, h, 0, 0)),
                 pl.BlockSpec((1, 1, bs, D), lambda b, h, s, *_: (b, h, s, 0)),
                 pl.BlockSpec((1, 1, bs, D), lambda b, h, s, *_: (b, h, s, 0)),
             ],
-            out_specs=pl.BlockSpec((1, 1, n_rep, D),
+            out_specs=pl.BlockSpec((1, 1, rows, D),
                                    lambda b, h, s, *_: (b, h, 0, 0)),
             scratch_shapes=[
-                pltpu.VMEM((n_rep, D), jnp.float32),
-                pltpu.VMEM((n_rep, 1), jnp.float32),
-                pltpu.VMEM((n_rep, 1), jnp.float32),
+                pltpu.VMEM((rows, D), jnp.float32),
+                pltpu.VMEM((rows, 1), jnp.float32),
+                pltpu.VMEM((rows, 1), jnp.float32),
             ],
         ),
-        out_shape=jax.ShapeDtypeStruct((B, h_kv, n_rep, D), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((B, h_kv, rows, D), q.dtype),
         interpret=interpret,
     )(kv_len.astype(jnp.int32), qg, kt, vt)
-    return out.reshape(B, H, D)
+    return out.reshape(B, h_kv, T, n_rep, D).transpose(0, 2, 1, 3, 4) \
+        .reshape(B, T, H, D)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_s",
+                                             "interpret"))
+def flash_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                 kv_len: jnp.ndarray, *, window: Optional[int] = None,
+                 block_s: int = 512, interpret: bool = False) -> jnp.ndarray:
+    """q: (B, H, D); k/v: (B, S, h_kv, D); kv_len: (B,) -> out (B, H, D).
+
+    The T = 1 slice of ``flash_verify``: with one draft position the
+    causal mask reduces to ``pos < kv_len`` and the q tile is the plain
+    GQA group, so a single kernel serves both paths.
+    """
+    return flash_verify(q[:, None], k, v, kv_len, window=window,
+                        block_s=block_s, interpret=interpret)[:, 0]

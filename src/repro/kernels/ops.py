@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from . import ref
 from .flash_decode import flash_decode as _flash_decode_kernel
+from .flash_decode import flash_verify as _flash_verify_kernel
 from .q4_matmul import q4_matmul as _q4_matmul_kernel
 from .ssd_scan import ssd_scan as _ssd_scan_kernel
 
@@ -39,6 +40,13 @@ def flash_decode(q, k, v, kv_len, *, window: Optional[int] = None):
     if _FORCE_REF:
         return ref.flash_decode_ref(q, k, v, kv_len, window=window)
     return _flash_decode_kernel(q, k, v, kv_len, window=window,
+                                interpret=_interpret())
+
+
+def flash_verify(q, k, v, kv_len, *, window: Optional[int] = None):
+    if _FORCE_REF:
+        return ref.flash_verify_ref(q, k, v, kv_len, window=window)
+    return _flash_verify_kernel(q, k, v, kv_len, window=window,
                                 interpret=_interpret())
 
 

@@ -6,7 +6,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from ..models.layers import decode_attention, ssd_chunked
+from ..models.layers import decode_attention, ssd_chunked, verify_attention
 from ..quant.grouped import QuantizedTensor, dequantize_q4
 
 
@@ -27,6 +27,14 @@ def flash_decode_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     """q: (B, H, D) -> (B, H, D) via the model-layer decode attention."""
     out = decode_attention(q[:, None], k, v, kv_len, window=window)
     return out[:, 0]
+
+
+def flash_verify_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     kv_len: jnp.ndarray, *,
+                     window: Optional[int] = None) -> jnp.ndarray:
+    """q: (B, T, H, D) -> (B, T, H, D) via the model-layer verify attention
+    (causal among the T draft positions; kv_len includes the draft block)."""
+    return verify_attention(q, k, v, kv_len, window=window)
 
 
 def ssd_scan_ref(x, dt, A, Bmat, Cmat, *, chunk: int = 128):

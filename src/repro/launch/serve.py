@@ -30,6 +30,10 @@ def main(argv=None) -> int:
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--ring-k", type=int, default=1)
+    ap.add_argument("--verify-tokens", type=int, default=0,
+                    help="T>1: also time a T-token speculative verify "
+                         "pass through the ring (weights streamed once "
+                         "per pass) against T single-token steps")
     ap.add_argument("--ctx", type=int, default=64)
     ap.add_argument("--mesh", choices=("debug", "prod"), default="debug")
     ap.add_argument("--stages", type=int, default=4)
@@ -91,6 +95,24 @@ def main(argv=None) -> int:
         print(f"ring decode (k={plan.k}, w={plan.w}, M={stages}, TP={tp}): "
               f"{args.new_tokens} tokens × {B} seqs in {dt:.2f}s "
               f"-> {dt / args.new_tokens * 1e3:.1f} ms/token/batch")
+
+        T = args.verify_tokens
+        if T > 1 and cfg.family != "ssm":
+            vstep = RS.build_ring_serve_step(cfg, mesh, plan,
+                                             n_tokens=T)(pr, cache)
+            vt = jnp.tile(nxt, (1, T))
+            logits, cache = vstep(vt, ln, pr, cache)   # compile + warm
+            jax.block_until_ready(logits)
+            iters = 3
+            t0 = time.time()
+            for _ in range(iters):
+                logits, cache = vstep(vt, ln, pr, cache)
+                jax.block_until_ready(logits)
+            dtv = (time.time() - t0) / iters
+            per_tok = dt / args.new_tokens
+            print(f"verify pass (T={T}): {dtv * 1e3:.1f} ms vs "
+                  f"{T}×{per_tok * 1e3:.1f} ms single steps -> "
+                  f"amortization {T * per_tok / dtv:.2f}x")
     else:
         step = RS.gspmd_decode_step(cfg, mesh, params, cache)
         t0 = time.time()

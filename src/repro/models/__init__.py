@@ -1,5 +1,5 @@
 from .model import (decode_step, forward, init_cache, init_params, prefill,
-                    whisper_encode)
+                    rollback_cache, whisper_encode)
 
 __all__ = ["decode_step", "forward", "init_cache", "init_params", "prefill",
-           "whisper_encode"]
+           "rollback_cache", "whisper_encode"]

@@ -194,40 +194,70 @@ def chunked_causal_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     return out[:, :Sq].astype(q.dtype)
 
 
-def decode_attention_stats(q: jnp.ndarray, k_cache: jnp.ndarray,
+def verify_attention_stats(q: jnp.ndarray, k_cache: jnp.ndarray,
                            v_cache: jnp.ndarray, kv_len: jnp.ndarray,
                            *, window: Optional[int] = None,
                            pos_offset=0
                            ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Partial decode attention returning online-softmax stats.
+    """Multi-query decode attention stats (speculative draft verification).
 
-    Used by the sequence-sharded ring runtime: each shard computes
-    (acc, m, l) over its local KV slice, then shards merge with
+    q: (B, T, H, D) — T draft positions scored in one pass. Query t sits at
+    absolute position ``kv_len - T + t`` (``kv_len`` counts valid cache
+    entries *including* the T draft tokens, so T = 1 reduces to ordinary
+    decode) and attends causally: cache positions <= its own.
+    k_cache/v_cache: (B, S_local, h_kv, D); ``pos_offset``: absolute
+    position of this shard's slot 0 (sequence-sharded ring runtime).
+    Returns acc (B, H, T, D) [unnormalized], m (B, H, T), l (B, H, T) for
     ``merge_attention_stats`` (psum/pmax over the TP axis).
-
-    q: (B, 1, H, D); k_cache/v_cache: (B, S_local, h_kv, D);
-    pos_offset: absolute position of this shard's slot 0.
-    Returns acc (B, H, D) [unnormalized], m (B, H), l (B, H).
     """
-    B, _, H, D = q.shape
+    B, T, H, D = q.shape
     S = k_cache.shape[1]
     n_rep = H // k_cache.shape[2]
     k = _repeat_kv(k_cache, n_rep)
     v = _repeat_kv(v_cache, n_rep)
     scale = 1.0 / math.sqrt(D)
-    s = jnp.einsum("bqhd,bshd->bhqs", q.astype(jnp.float32) * scale,
-                   k.astype(jnp.float32))[:, :, 0]      # (B, H, S)
-    pos = jnp.arange(S) + pos_offset
-    mask = pos[None, :] < kv_len[:, None]               # (B, S)
+    s = jnp.einsum("bthd,bshd->bhts", q.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))               # (B, H, T, S)
+    pos = jnp.arange(S) + pos_offset                    # (S,)
+    qpos = kv_len[:, None] - T + jnp.arange(T)[None, :]  # (B, T)
+    mask = pos[None, None, :] <= qpos[:, :, None]       # (B, T, S)
     if window is not None:
-        mask &= pos[None, :] >= (kv_len[:, None] - window)
-    s = jnp.where(mask[:, None, :], s, -jnp.inf)
-    m = jnp.max(s, axis=-1)                             # (B, H)
+        mask &= pos[None, None, :] > (qpos[:, :, None] - window)
+    s = jnp.where(mask[:, None], s, -jnp.inf)
+    m = jnp.max(s, axis=-1)                             # (B, H, T)
     m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
-    p = jnp.where(mask[:, None, :], jnp.exp(s - m_safe[..., None]), 0.0)
-    l = p.sum(-1)                                       # (B, H)
-    acc = jnp.einsum("bhs,bshd->bhd", p, v.astype(jnp.float32))
+    p = jnp.where(mask[:, None], jnp.exp(s - m_safe[..., None]), 0.0)
+    l = p.sum(-1)                                       # (B, H, T)
+    acc = jnp.einsum("bhts,bshd->bhtd", p, v.astype(jnp.float32))
     return acc, m, l
+
+
+def verify_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray, kv_len: jnp.ndarray,
+                     *, window: Optional[int] = None) -> jnp.ndarray:
+    """Multi-position attention against a cache: (B, T, H, D) -> same.
+
+    The pure-jnp oracle for the Pallas ``flash_verify`` kernel; see
+    ``verify_attention_stats`` for the causal-among-drafts semantics.
+    """
+    acc, m, l = verify_attention_stats(q, k_cache, v_cache, kv_len,
+                                       window=window)
+    out = acc / jnp.maximum(l[..., None], 1e-30)        # (B, H, T, D)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def decode_attention_stats(q: jnp.ndarray, k_cache: jnp.ndarray,
+                           v_cache: jnp.ndarray, kv_len: jnp.ndarray,
+                           *, window: Optional[int] = None,
+                           pos_offset=0
+                           ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Single-query stats — the T = 1 slice of ``verify_attention_stats``.
+
+    q: (B, 1, H, D) -> acc (B, H, D) [unnormalized], m (B, H), l (B, H).
+    """
+    acc, m, l = verify_attention_stats(q, k_cache, v_cache, kv_len,
+                                       window=window, pos_offset=pos_offset)
+    return acc[:, :, 0], m[:, :, 0], l[:, :, 0]
 
 
 def merge_attention_stats(acc, m, l, axis_name: str) -> jnp.ndarray:
@@ -374,31 +404,37 @@ def attn_block(p: Params, cfg: ModelConfig, x: jnp.ndarray, positions,
     quantized = cache is not None and "k_scale" in cache
     new_cache = cache
     if decode:
-        assert cache is not None and S == 1
+        assert cache is not None
         kc, vc, ln = cache["k"], cache["v"], cache["len"]
         Smax = kc.shape[1]
-        if window is not None and Smax == window:
-            slot = (ln % window)
-        else:
-            slot = jnp.minimum(ln, Smax - 1)
+        rolling = window is not None and Smax == window
+        # T > 1 (speculative verify) needs position-addressable slots for
+        # causal masking among the draft tokens; a rolling SWA buffer
+        # permutes positions, so multi-token decode is gated off there.
+        assert S == 1 or not rolling, "multi-token decode needs Smax > window"
         if quantized:
-            kq, ksc = quantize_kv(k[:, 0:1])
-            vq, vsc = quantize_kv(v[:, 0:1])
-            k_wr, v_wr = kq, vq
+            k_wr, ksc = quantize_kv(k)
+            v_wr, vsc = quantize_kv(v)
         else:
-            k_wr, v_wr = k[:, 0:1].astype(kc.dtype), v[:, 0:1].astype(vc.dtype)
-        kc = jax.vmap(lambda c, t, i: lax.dynamic_update_slice(
-            c, t, (i, 0, 0)))(kc, k_wr, slot)
-        vc = jax.vmap(lambda c, t, i: lax.dynamic_update_slice(
-            c, t, (i, 0, 0)))(vc, v_wr, slot)
-        new_cache = {"k": kc, "v": vc, "len": ln + 1}
+            k_wr, v_wr = k.astype(kc.dtype), v.astype(vc.dtype)
+        ks_c = cache.get("k_scale")
+        vs_c = cache.get("v_scale")
+        for t in range(S):                       # static, small (draft block)
+            slot = ((ln + t) % window) if rolling \
+                else jnp.minimum(ln + t, Smax - 1)
+            kc = jax.vmap(lambda c, tt, i: lax.dynamic_update_slice(
+                c, tt, (i, 0, 0)))(kc, k_wr[:, t:t + 1], slot)
+            vc = jax.vmap(lambda c, tt, i: lax.dynamic_update_slice(
+                c, tt, (i, 0, 0)))(vc, v_wr[:, t:t + 1], slot)
+            if quantized:
+                ks_c = jax.vmap(lambda c, tt, i: lax.dynamic_update_slice(
+                    c, tt, (i, 0)))(ks_c, ksc[:, t:t + 1].astype(ks_c.dtype),
+                                    slot)
+                vs_c = jax.vmap(lambda c, tt, i: lax.dynamic_update_slice(
+                    c, tt, (i, 0)))(vs_c, vsc[:, t:t + 1].astype(vs_c.dtype),
+                                    slot)
+        new_cache = {"k": kc, "v": vc, "len": ln + S}
         if quantized:
-            ks_c = jax.vmap(lambda c, t, i: lax.dynamic_update_slice(
-                c, t, (i, 0)))(cache["k_scale"], ksc.astype(
-                    cache["k_scale"].dtype), slot)
-            vs_c = jax.vmap(lambda c, t, i: lax.dynamic_update_slice(
-                c, t, (i, 0)))(cache["v_scale"], vsc.astype(
-                    cache["v_scale"].dtype), slot)
             new_cache["k_scale"] = ks_c
             new_cache["v_scale"] = vs_c
             k_at = dequantize_kv(kc, ks_c, q.dtype)
@@ -406,8 +442,8 @@ def attn_block(p: Params, cfg: ModelConfig, x: jnp.ndarray, positions,
         else:
             k_at = kc.astype(q.dtype)
             v_at = vc.astype(q.dtype)
-        kv_len = jnp.minimum(ln + 1, Smax) if window is not None else ln + 1
-        out = decode_attention(q, k_at, v_at, kv_len, window=window)
+        kv_len = jnp.minimum(ln + S, Smax) if window is not None else ln + S
+        out = verify_attention(q, k_at, v_at, kv_len, window=window)
     else:
         out = chunked_causal_attention(q, k, v, window=window) if causal \
             else _full_attention(q, k, v)
@@ -513,18 +549,21 @@ def mla_block(p: Params, cfg: ModelConfig, x: jnp.ndarray, positions,
 
     new_cache = cache
     if decode:
-        assert cache is not None and S == 1
+        assert cache is not None
         lc, ln = cache["latent"], cache["len"]
         Smax = lc.shape[1]
-        slot = jnp.minimum(ln, Smax - 1)
-        lc = jax.vmap(lambda c, t, i: lax.dynamic_update_slice(
-            c, t, (i, 0)))(lc, lat_cat[:, 0:1].astype(lc.dtype), slot)
-        new_cache = {"latent": lc, "len": ln + 1}
+        for t in range(S):                   # static, small (draft block)
+            slot = jnp.minimum(ln + t, Smax - 1)
+            lc = jax.vmap(lambda c, tt, i: lax.dynamic_update_slice(
+                c, tt, (i, 0)))(lc, lat_cat[:, t:t + 1].astype(lc.dtype),
+                                slot)
+        new_cache = {"latent": lc, "len": ln + S}
         lat_all = lc[..., :r_kv].astype(x.dtype)          # (B, Smax, r)
         rope_all = lc[..., r_kv:].astype(x.dtype)         # (B, Smax, dr)
-        kv_len = ln + 1
+        # query t sits at absolute position ln + t; causal among drafts
         pos_idx = jnp.arange(Smax)
-        mask = pos_idx[None, :] < kv_len[:, None]         # (B, Smax)
+        qpos = ln[:, None] + jnp.arange(S)[None, :]       # (B, S)
+        mask = pos_idx[None, None, :] <= qpos[:, :, None]  # (B, S, Smax)
         if absorbed:
             # fold W_UK: q_lat[h] = q_nope[h] @ wk_b[:, h]^T  -> (B,1,H,r)
             wk = p["wk_b"].reshape(r_kv, H, dn)
@@ -534,7 +573,7 @@ def mla_block(p: Params, cfg: ModelConfig, x: jnp.ndarray, positions,
             s_rope = jnp.einsum("bqhd,bsd->bhqs", q_rope, rope_all,
                                 preferred_element_type=jnp.float32)
             s_all = (s_nope + s_rope) * scale
-            s_all = jnp.where(mask[:, None, None, :], s_all, -jnp.inf)
+            s_all = jnp.where(mask[:, None], s_all, -jnp.inf)
             pr = jax.nn.softmax(s_all, axis=-1)
             # output in latent space, then expand with W_UV
             o_lat = jnp.einsum("bhqs,bsr->bqhr", pr, lat_all.astype(
@@ -552,7 +591,7 @@ def mla_block(p: Params, cfg: ModelConfig, x: jnp.ndarray, positions,
             qq = jnp.concatenate([q_nope, q_rope], -1)
             s_all = jnp.einsum("bqhd,bshd->bhqs", qq, kk,
                                preferred_element_type=jnp.float32) * scale
-            s_all = jnp.where(mask[:, None, None, :], s_all, -jnp.inf)
+            s_all = jnp.where(mask[:, None], s_all, -jnp.inf)
             pr = jax.nn.softmax(s_all, axis=-1)
             out = jnp.einsum("bhqs,bshv->bqhv", pr, vv.astype(jnp.float32)
                              ).astype(x.dtype)

@@ -397,7 +397,7 @@ def _backbone(params: Params, cfg: ModelConfig, x, positions, cache, *,
         raise ValueError(cfg.family)
 
     if new_cache is not None:
-        new_cache["len"] = ln + (1 if decode else x.shape[1])
+        new_cache["len"] = ln + x.shape[1]
     return x, new_cache
 
 
@@ -449,19 +449,42 @@ def decode_step(params: Params, cfg: ModelConfig, cache: Dict,
                 tokens: jnp.ndarray, *,
                 tp_axis: Optional[str] = None
                 ) -> Tuple[jnp.ndarray, Dict]:
-    """One decode step. tokens: (B, 1)."""
+    """One decode step. tokens: (B, T).
+
+    T = 1 is ordinary autoregressive decode. T > 1 is the speculative
+    *verify* path: the T tokens (last accepted token followed by T-1 draft
+    tokens) are scored in one pass with causal masking among them; the
+    cache advances by T and the caller rolls rejected positions back with
+    ``rollback_cache``. Only KV-cache families support T > 1 — recurrent
+    state (ssm / hybrid) cannot roll back.
+    """
+    B, T = tokens.shape
+    if T > 1 and cfg.family not in ("dense", "moe", "vlm"):
+        raise ValueError(f"multi-token decode unsupported for {cfg.family}")
     if cfg.family == "audio":
         return whisper_decode_step(params, cfg, cache, tokens,
                                    tp_axis=tp_axis)
     x = embed_tokens(params, cfg, tokens)
-    B = x.shape[0]
-    pos = cache["len"][:, None]                         # (B, 1)
+    pos = cache["len"][:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]
     if cfg.mrope:
-        pos = jnp.broadcast_to(pos[None], (3, B, 1))
+        pos = jnp.broadcast_to(pos[None], (3, B, T))
     x, new_cache = _backbone(params, cfg, x, pos, cache, decode=True,
                              tp_axis=tp_axis, remat=False)
     x = ll.rms_norm(x, params["final_norm"], cfg.norm_eps)
     return unembed(params, cfg, x), new_cache
+
+
+def rollback_cache(cache: Dict, new_len: jnp.ndarray) -> Dict:
+    """Roll rejected speculative positions out of a KV cache.
+
+    Entries past ``len`` are never attended (position-masked) and the next
+    decode writes at slot ``len``, so discarding rejected draft tokens is
+    just resetting the per-sequence counter. Not valid for recurrent-state
+    families (ssm / hybrid), whose state updates are irreversible.
+    """
+    out = dict(cache)
+    out["len"] = jnp.asarray(new_len).astype(cache["len"].dtype)
+    return out
 
 
 # --------------------------------------------------------------------------- #

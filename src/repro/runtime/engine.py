@@ -31,12 +31,20 @@ class SlotState:
     uid: Optional[int] = None        # request id (None = free)
     remaining: int = 0               # tokens still to generate
     generated: Optional[List[int]] = None
+    proposed: int = 0                # draft tokens proposed (speculative)
+    accepted: int = 0                # draft tokens accepted (speculative)
 
 
 @dataclasses.dataclass
 class FinishedRequest:
     uid: int
     tokens: List[int]
+    proposed: int = 0                # speculative bookkeeping (0 = vanilla)
+    accepted: int = 0
+
+    @property
+    def acceptance_rate(self) -> float:
+        return self.accepted / max(self.proposed, 1)
 
 
 class ContinuousBatcher:
@@ -47,16 +55,24 @@ class ContinuousBatcher:
     write_slot(cache, slot_cache, slot_idx, length) -> cache
         installs a prefilled sequence into batch slot ``slot_idx``.
     decode(cache, tokens (B,1)) -> (logits (B,1,V), cache)
+
+    ``spec``: optional ``runtime.speculative.SpeculativeDecoder``. When
+    set, each step runs one draft/verify cycle instead of one decode —
+    every occupied slot advances by 1..gamma+1 tokens per step while the
+    emitted streams stay byte-identical to vanilla greedy decode. The
+    decoder owns the draft-side cache; per-slot acceptance counters land
+    on ``SlotState``/``FinishedRequest``.
     """
 
     def __init__(self, batch: int, prefill_one: Callable,
                  write_slot: Callable, decode: Callable,
-                 *, eos_id: Optional[int] = None):
+                 *, eos_id: Optional[int] = None, spec=None):
         self.B = batch
         self.prefill_one = prefill_one
         self.write_slot = write_slot
         self.decode = decode
         self.eos_id = eos_id
+        self.spec = spec
         self.slots = [SlotState() for _ in range(batch)]
         self.finished: List[FinishedRequest] = []
 
@@ -78,13 +94,24 @@ class ContinuousBatcher:
         first_tok, slot_cache = self.prefill_one(
             jnp.asarray(prompt)[None, :])
         cache = self.write_slot(cache, slot_cache, slot, len(prompt))
+        if self.spec is not None:
+            self.spec.admit(jnp.asarray(prompt)[None, :], slot, len(prompt))
         tokens = tokens.at[slot, 0].set(first_tok)
         self.slots[slot] = SlotState(uid=uid, remaining=max_new - 1,
                                      generated=[int(first_tok)])
         return cache, tokens
 
+    def _finish(self, i: int) -> None:
+        st = self.slots[i]
+        self.finished.append(
+            FinishedRequest(uid=st.uid, tokens=st.generated,
+                            proposed=st.proposed, accepted=st.accepted))
+        self.slots[i] = SlotState()                      # free immediately
+
     def step(self, cache, tokens: jnp.ndarray):
         """One decode step for every occupied slot."""
+        if self.spec is not None:
+            return self._spec_step(cache, tokens)
         logits, cache = self.decode(cache, tokens)
         nxt = jnp.argmax(logits[:, 0], axis=-1)          # greedy
         tokens = nxt[:, None].astype(tokens.dtype)
@@ -95,9 +122,32 @@ class ContinuousBatcher:
             st.remaining -= 1
             if st.remaining <= 0 or (self.eos_id is not None
                                      and tok == self.eos_id):
-                self.finished.append(
-                    FinishedRequest(uid=st.uid, tokens=st.generated))
-                self.slots[i] = SlotState()              # free immediately
+                self._finish(i)
+        return cache, tokens
+
+    def _spec_step(self, cache, tokens: jnp.ndarray):
+        """One draft/verify cycle: every occupied slot advances by up to
+        gamma+1 tokens. Tokens emitted past a slot's budget (or past EOS)
+        are dropped — the slot frees immediately, exactly like vanilla."""
+        cache, res = self.spec.cycle(cache, tokens, active=self.active())
+        tokens = res.next_tokens.astype(tokens.dtype)
+        for i in self.active():
+            st = self.slots[i]
+            n = int(res.n_emit[i])
+            # counters estimate draft/target *agreement* (the acceptance
+            # probability behind E[tokens/cycle]), so verified-but-
+            # truncated drafts still count — truncation doesn't bias the
+            # agreement sample.
+            st.proposed += self.spec.gamma
+            st.accepted += n - 1
+            for tok in res.emitted[i, :n]:
+                tok = int(tok)
+                st.generated.append(tok)
+                st.remaining -= 1
+                if st.remaining <= 0 or (self.eos_id is not None
+                                         and tok == self.eos_id):
+                    self._finish(i)
+                    break
         return cache, tokens
 
     def run(self, cache, requests, *, max_steps: int = 10_000):

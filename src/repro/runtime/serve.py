@@ -41,7 +41,20 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
+
+try:  # jax >= 0.6 exports shard_map at top level (with check_vma=)
+    from jax import shard_map as _shard_map
+
+    _SHARD_MAP_CHECK_KW = "check_vma"
+except ImportError:  # pragma: no cover - version-dependent
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    _SHARD_MAP_CHECK_KW = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=False):
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **{_SHARD_MAP_CHECK_KW: check_vma})
 
 from ..configs.base import ModelConfig
 from ..models import layers as ll
@@ -279,13 +292,14 @@ def _masked_slot_update(arr: jnp.ndarray, new: jnp.ndarray,
 def _ring_attn_layer(cfg: ModelConfig, p, x, c, ln, *, s_start, s_len):
     """One dense/moe/vlm decoder layer, ring decode mode.
 
-    x: (mb, 1, d) replicated over "model"; c: local cache slice
+    x: (mb, T, d) replicated over "model" (T = 1 ordinary decode, T > 1 the
+    speculative verify block); c: local cache slice
     {k/v: (mb, s_len, hk, hd), [scales]}; ln: (mb,) tokens so far.
     """
-    mb = x.shape[0]
-    pos = ln[:, None]
+    mb, T = x.shape[0], x.shape[1]
+    pos = ln[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]
     if cfg.mrope:
-        pos = jnp.broadcast_to(pos[None], (3, mb, 1))
+        pos = jnp.broadcast_to(pos[None], (3, mb, T))
     h = ll.rms_norm(x, p["attn_norm"], cfg.norm_eps)
     if cfg.mla:
         return _ring_mla_layer(cfg, p, x, h, c, ln, pos,
@@ -293,38 +307,47 @@ def _ring_attn_layer(cfg: ModelConfig, p, x, c, ln, *, s_start, s_len):
     q, k, v = ll.attn_qkv(p["attn"], cfg, h, pos)
     window = cfg.attn_window
     Smax_global = s_len * lax.psum(1, "model")
-    slot = (ln % window) if (window is not None
-                             and Smax_global == window) \
-        else jnp.minimum(ln, Smax_global - 1)
+    rolling = window is not None and Smax_global == window
+    assert T == 1 or not rolling, "multi-token ring needs Smax > window"
     quantized = "k_scale" in c
     if quantized:
-        kq, ksc = ll.quantize_kv(k)
-        vq, vsc = ll.quantize_kv(v)
-        kc = _masked_slot_update(c["k"], kq, slot, s_start, s_len)
-        vc = _masked_slot_update(c["v"], vq, slot, s_start, s_len)
-        ks = _masked_slot_update(c["k_scale"], ksc, slot, s_start, s_len)
-        vs = _masked_slot_update(c["v_scale"], vsc, slot, s_start, s_len)
+        k_wr, ksc = ll.quantize_kv(k)
+        v_wr, vsc = ll.quantize_kv(v)
+    else:
+        k_wr, v_wr = k, v
+    kc, vc = c["k"], c["v"]
+    ks = c.get("k_scale")
+    vs = c.get("v_scale")
+    for t in range(T):                       # static, small (draft block)
+        slot = ((ln + t) % window) if rolling \
+            else jnp.minimum(ln + t, Smax_global - 1)
+        kc = _masked_slot_update(kc, k_wr[:, t:t + 1], slot, s_start, s_len)
+        vc = _masked_slot_update(vc, v_wr[:, t:t + 1], slot, s_start, s_len)
+        if quantized:
+            ks = _masked_slot_update(ks, ksc[:, t:t + 1], slot, s_start,
+                                     s_len)
+            vs = _masked_slot_update(vs, vsc[:, t:t + 1], slot, s_start,
+                                     s_len)
+    if quantized:
         new_c = {"k": kc, "v": vc, "k_scale": ks, "v_scale": vs}
         k_at = ll.dequantize_kv(kc, ks, q.dtype)
         v_at = ll.dequantize_kv(vc, vs, q.dtype)
     else:
-        kc = _masked_slot_update(c["k"], k, slot, s_start, s_len)
-        vc = _masked_slot_update(c["v"], v, slot, s_start, s_len)
         new_c = {"k": kc, "v": vc}
         k_at = kc.astype(q.dtype)
         v_at = vc.astype(q.dtype)
-    kv_len = jnp.minimum(ln + 1, Smax_global) if window is not None \
-        else ln + 1
+    kv_len = jnp.minimum(ln + T, Smax_global) if window is not None \
+        else ln + T
     # rolling SWA buffer: every valid slot is in-window once full, and the
     # stats path masks by absolute position, so pass window=None when the
     # buffer size equals the window (slots are position-permuted).
-    eff_window = None if (window is not None and Smax_global == window) \
-        else window
-    acc, m_, l_ = ll.decode_attention_stats(q, k_at, v_at, kv_len,
+    eff_window = None if rolling else window
+    acc, m_, l_ = ll.verify_attention_stats(q, k_at, v_at, kv_len,
                                             window=eff_window,
                                             pos_offset=s_start)
-    out = ll.merge_attention_stats(acc, m_, l_, "model")   # (mb, H, hd)
-    o = out.reshape(mb, 1, -1).astype(x.dtype) @ p["attn"]["wo"]
+    out = ll.merge_attention_stats(acc, m_, l_, "model")   # (mb, H, T, hd)
+    o = out.transpose(0, 2, 1, 3).reshape(mb, T, -1).astype(x.dtype) \
+        @ p["attn"]["wo"]
     x = x + o
     g = ll.rms_norm(x, p["ffn_norm"], cfg.norm_eps)
     if cfg.n_experts:
@@ -337,8 +360,9 @@ def _ring_attn_layer(cfg: ModelConfig, p, x, c, ln, *, s_start, s_len):
 def _ring_mla_layer(cfg: ModelConfig, p, x, h, c, ln, pos, *, s_start,
                     s_len):
     """MLA ring decode: latent cache sequence-sharded; absorbed scores are
-    computed per shard and merged with the distributed online softmax."""
-    mb = x.shape[0]
+    computed per shard and merged with the distributed online softmax.
+    x: (mb, T, d) — T > 1 scores the speculative draft block causally."""
+    mb, T = x.shape[0], x.shape[1]
     pa = p["attn"]
     H = cfg.n_heads
     r_kv = cfg.kv_lora_rank
@@ -346,7 +370,7 @@ def _ring_mla_layer(cfg: ModelConfig, p, x, h, c, ln, pos, *, s_start,
     scale = 1.0 / math.sqrt(dn + dr)
 
     q_lat = ll.rms_norm(h @ pa["wq_a"], pa["q_norm"], cfg.norm_eps)
-    q = (q_lat @ pa["wq_b"]).reshape(mb, 1, H, dn + dr)
+    q = (q_lat @ pa["wq_b"]).reshape(mb, T, H, dn + dr)
     q_nope, q_rope = q[..., :dn], q[..., dn:]
     q_rope = ll.apply_rope(q_rope, pos, cfg.rope_theta)
 
@@ -354,36 +378,36 @@ def _ring_mla_layer(cfg: ModelConfig, p, x, h, c, ln, pos, *, s_start,
     latent = ll.rms_norm(kv[..., :r_kv], pa["kv_norm"], cfg.norm_eps)
     k_rope = ll.apply_rope(kv[..., r_kv:][:, :, None, :], pos,
                            cfg.rope_theta)[:, :, 0]
-    lat_cat = jnp.concatenate([latent, k_rope], -1)          # (mb, 1, r+dr)
+    lat_cat = jnp.concatenate([latent, k_rope], -1)          # (mb, T, r+dr)
 
-    slot = ln
-    lc = _masked_slot_update(c["latent"], lat_cat, slot, s_start, s_len)
+    lc = c["latent"]
+    for t in range(T):                       # static, small (draft block)
+        lc = _masked_slot_update(lc, lat_cat[:, t:t + 1], ln + t,
+                                 s_start, s_len)
     new_c = {"latent": lc}
     lat_all = lc[..., :r_kv].astype(x.dtype)                 # (mb, sl, r)
     rope_all = lc[..., r_kv:].astype(x.dtype)
 
     wk = pa["wk_b"].reshape(r_kv, H, dn)
-    q_abs = jnp.einsum("bshd,rhd->bshr", q_nope, wk)
-    s_nope = jnp.einsum("bqhr,bsr->bhs", q_abs[:, 0:1].squeeze(1)[:, None],
-                        lat_all, preferred_element_type=jnp.float32) \
-        if False else jnp.einsum("bhr,bsr->bhs", q_abs[:, 0],
-                                 lat_all,
-                                 preferred_element_type=jnp.float32)
-    s_rope = jnp.einsum("bhd,bsd->bhs", q_rope[:, 0], rope_all,
+    q_abs = jnp.einsum("bthd,rhd->bthr", q_nope, wk)
+    s_nope = jnp.einsum("bthr,bsr->bhts", q_abs, lat_all,
                         preferred_element_type=jnp.float32)
-    s_all = (s_nope + s_rope) * scale                        # (mb, H, sl)
-    spos = jnp.arange(s_len) + s_start
-    mask = spos[None, :] < (ln + 1)[:, None]
-    s_all = jnp.where(mask[:, None, :], s_all, -jnp.inf)
-    m_ = jnp.max(s_all, -1)
+    s_rope = jnp.einsum("bthd,bsd->bhts", q_rope, rope_all,
+                        preferred_element_type=jnp.float32)
+    s_all = (s_nope + s_rope) * scale                        # (mb, H, T, sl)
+    spos = jnp.arange(s_len) + s_start                       # (sl,)
+    qpos = ln[:, None] + jnp.arange(T)[None, :]              # (mb, T)
+    mask = spos[None, None, :] <= qpos[:, :, None]           # (mb, T, sl)
+    s_all = jnp.where(mask[:, None], s_all, -jnp.inf)
+    m_ = jnp.max(s_all, -1)                                  # (mb, H, T)
     m_safe = jnp.where(jnp.isfinite(m_), m_, 0.0)
-    pr = jnp.where(mask[:, None, :], jnp.exp(s_all - m_safe[..., None]), 0.0)
+    pr = jnp.where(mask[:, None], jnp.exp(s_all - m_safe[..., None]), 0.0)
     l_ = pr.sum(-1)
-    acc = jnp.einsum("bhs,bsr->bhr", pr, lat_all.astype(jnp.float32))
-    o_lat = ll.merge_attention_stats(acc, m_, l_, "model")   # (mb, H, r)
+    acc = jnp.einsum("bhts,bsr->bhtr", pr, lat_all.astype(jnp.float32))
+    o_lat = ll.merge_attention_stats(acc, m_, l_, "model")   # (mb, H, T, r)
     wv = pa["wv_b"].reshape(r_kv, H, dv)
-    out = jnp.einsum("bhr,rhv->bhv", o_lat.astype(x.dtype), wv)
-    o = out.reshape(mb, 1, H * dv) @ pa["wo"]
+    out = jnp.einsum("bhtr,rhv->bthv", o_lat.astype(x.dtype), wv)
+    o = out.reshape(mb, T, H * dv) @ pa["wo"]
     x = x + o
     g = ll.rms_norm(x, p["ffn_norm"], cfg.norm_eps)
     y = ll.glu_ffn(p["ffn"], g, tp_axis="model")
@@ -458,14 +482,24 @@ class RingPlan:
         return cls(n_stages=n_stages, k=k, w=per_stage // k, L_pad=L_pad)
 
 
-def build_ring_serve_step(cfg: ModelConfig, mesh: Mesh, plan: RingPlan
-                          ) -> Callable:
+def build_ring_serve_step(cfg: ModelConfig, mesh: Mesh, plan: RingPlan,
+                          *, n_tokens: int = 1) -> Callable:
     """Returns jit'd serve_step(params_ring, cache_ring, tokens, ln) ->
     (logits, new_cache).
 
     ``params_ring``/``cache_ring`` must already be in ring layer order
     (``pad_and_permute``) with vocab padded (``pad_vocab``).
+
+    ``n_tokens`` (T): tokens scored per ring pass. T = 1 is the paper's
+    one-token-per-ring decode; T > 1 is the speculative *verify* pass —
+    tokens (B, T) are written into the cache and scored with causal
+    masking among them, ``len`` advances by T, and the engine rolls back
+    rejected positions by resetting per-slot ``len`` (the next pass
+    overwrites the stale slots).
     """
+    if n_tokens > 1 and cfg.family == "ssm":
+        raise ValueError("speculative verify needs a rollbackable KV cache; "
+                         "ssm state is irreversible")
     M_stages, k, w = plan.n_stages, plan.k, plan.w
     has_pod = "pod" in mesh.axis_names
     pod = ("pod",) if has_pod else ()
@@ -473,7 +507,7 @@ def build_ring_serve_step(cfg: ModelConfig, mesh: Mesh, plan: RingPlan
     kM = k * M_stages
 
     def local_fn(tokens, ln, params_loc, cache_loc):
-        # local shapes: tokens (B, 1), ln (B,) [per-pod batch]
+        # local shapes: tokens (B, T), ln (B,) [per-pod batch]
         # params_loc["blocks"]: (k*w, ...); cache_loc["layers"]: (k*w, B, ...)
         m = lax.axis_index("data")
         B = tokens.shape[0]
@@ -489,7 +523,7 @@ def build_ring_serve_step(cfg: ModelConfig, mesh: Mesh, plan: RingPlan
             s_len = 0
         s_start = lax.axis_index("model") * s_len
 
-        emb_all = _ring_embed(params_loc["embed"], tokens)    # (B, 1, d)
+        emb_all = _ring_embed(params_loc["embed"], tokens)    # (B, T, d)
         dtype = emb_all.dtype
 
         def step(t, carry):
@@ -537,18 +571,18 @@ def build_ring_serve_step(cfg: ModelConfig, mesh: Mesh, plan: RingPlan
             x_next = lax.ppermute(x_out, "data", perm)
             return x_next, layers_c, out_buf
 
-        x0 = jnp.zeros((mb, 1, d), dtype)
-        out0 = jnp.zeros((B, 1, d), dtype)
+        x0 = jnp.zeros((mb, n_tokens, d), dtype)
+        out0 = jnp.zeros((B, n_tokens, d), dtype)
         x_fin, layers_c, out_buf = lax.fori_loop(
             0, n_steps, step, (x0, cache_loc["layers"], out0))
 
         # final hiddens live on the stage that owns the last window;
         # psum over the ring replicates them for the vocab-sharded matmul.
         hidden = lax.psum(out_buf, "data")
-        logits_loc = _ring_unembed(params_loc, cfg, hidden)   # (B,1,V/tp)
+        logits_loc = _ring_unembed(params_loc, cfg, hidden)   # (B,T,V/tp)
         new_cache = dict(cache_loc)
         new_cache["layers"] = layers_c
-        new_cache["len"] = ln + 1
+        new_cache["len"] = ln + n_tokens
         return logits_loc, new_cache
 
     # ---- shard_map wiring -------------------------------------------------

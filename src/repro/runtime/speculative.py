@@ -1,0 +1,148 @@
+"""Speculative decoding: greedy draft/verify loop over two model stacks.
+
+A small *draft* model proposes ``gamma`` tokens autoregressively; the
+target model then scores all ``gamma + 1`` positions (the pending token
+followed by the drafts) in ONE multi-token verify pass — either
+``models.decode_step`` with T > 1 on a single host or the piped-ring
+verify step (``runtime.serve.build_ring_serve_step(n_tokens=gamma+1)``).
+The verify pass streams each layer's weights once for the whole block,
+which is why it wins on the paper's weight-bandwidth-bound home clusters
+(Ghidorah, arXiv 2505.23219; PIPO, arXiv 2504.03664).
+
+Greedy acceptance keeps the emitted stream *byte-identical* to plain
+greedy decode of the target: drafts are accepted while they match the
+target argmax, and the first mismatch is replaced by the target's own
+token, so every cycle emits between 1 and gamma + 1 tokens. Rejected
+cache positions roll back by resetting the per-slot ``len`` counter —
+entries past ``len`` are position-masked and the next write lands at
+``len``, so no data movement is needed (see ``models.rollback_cache``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.latency import expected_tokens_per_cycle  # noqa: F401  (re-export)
+from ..models.model import rollback_cache
+
+
+@dataclasses.dataclass
+class SpecCycleResult:
+    """Host-side view of one draft/verify cycle."""
+
+    next_tokens: jnp.ndarray     # (B, 1) new pending token per slot
+    emitted: np.ndarray          # (B, gamma+1) emitted tokens (row-padded)
+    n_emit: np.ndarray           # (B,) valid prefix of ``emitted`` (>= 1)
+
+    @property
+    def n_accepted(self) -> np.ndarray:
+        return self.n_emit - 1
+
+
+class SpeculativeDecoder:
+    """Drives a draft model against a target verify function.
+
+    draft_decode(d_cache, tokens (B, 1)) -> (logits (B, 1, V), d_cache)
+    verify(t_cache, tokens (B, T))       -> (logits (B, T, V), t_cache)
+
+    Both caches carry a per-sequence ``len`` counter (the only thing the
+    rollback touches). The decoder owns the draft-side cache and its
+    prefill/slot plumbing so the serving engine only threads the target
+    cache through, exactly as in vanilla decode.
+    """
+
+    def __init__(self, draft_decode: Callable, verify: Callable, *,
+                 gamma: int = 4,
+                 draft_cache: Optional[Dict] = None,
+                 draft_prefill_one: Optional[Callable] = None,
+                 draft_write_slot: Optional[Callable] = None,
+                 vocab: Optional[int] = None):
+        assert gamma >= 1
+        self.draft_decode = draft_decode
+        self.verify = verify
+        self.gamma = gamma
+        self.draft_cache = draft_cache
+        self.draft_prefill_one = draft_prefill_one
+        self.draft_write_slot = draft_write_slot
+        #: true vocab size — REQUIRED when either model fn returns padded
+        #: logits (the ring step pads vocab to a multiple of tp; a zero
+        #: pad column would otherwise win the argmax whenever every real
+        #: logit is negative). None = logits are already unpadded.
+        self.vocab = vocab
+        # aggregate bookkeeping (per-slot counters live in the engine)
+        self.cycles = 0
+        self.proposed = 0
+        self.accepted = 0
+
+    # ------------------------------------------------------------------ #
+
+    @property
+    def acceptance_rate(self) -> float:
+        return self.accepted / max(self.proposed, 1)
+
+    def admit(self, prompt: jnp.ndarray, slot: int, length: int) -> None:
+        """Prefill the draft cache for a newly admitted request."""
+        if self.draft_prefill_one is None:
+            return
+        _, slot_cache = self.draft_prefill_one(prompt)
+        self.draft_cache = self.draft_write_slot(self.draft_cache,
+                                                 slot_cache, slot, length)
+
+    def cycle(self, t_cache: Dict, tokens: jnp.ndarray,
+              active=None) -> Tuple[Dict, SpecCycleResult]:
+        """One draft/verify cycle for the whole batch.
+
+        ``tokens``: (B, 1) pending token per slot — emitted already but in
+        neither cache. ``active``: optional iterable of occupied slot
+        indices; only those rows feed the aggregate acceptance counters
+        (free slots decode junk). Returns the rolled-back target cache and
+        the emitted block; the draft cache is updated in place.
+        """
+        B = tokens.shape[0]
+        g = self.gamma
+        d_cache = self.draft_cache
+        t_len0 = t_cache["len"]
+        d_len0 = d_cache["len"]
+
+        # -- draft gamma tokens; one extra step banks the last draft's KV
+        #    so a fully-accepted cycle leaves the draft cache complete.
+        drafts = []
+        cur = tokens
+        for _ in range(g):
+            lg, d_cache = self.draft_decode(d_cache, cur)
+            lg = lg if self.vocab is None else lg[..., :self.vocab]
+            cur = jnp.argmax(lg[:, -1], -1)[:, None].astype(tokens.dtype)
+            drafts.append(cur)
+        _, d_cache = self.draft_decode(d_cache, cur)
+        draft_blk = jnp.concatenate(drafts, axis=1)          # (B, g)
+
+        # -- one multi-token verify pass on the target --------------------
+        ver_in = jnp.concatenate([tokens, draft_blk], axis=1)  # (B, g+1)
+        logits, t_cache = self.verify(t_cache, ver_in)
+        logits = logits if self.vocab is None else logits[..., :self.vocab]
+        tgt = jnp.argmax(logits, -1).astype(tokens.dtype)      # (B, g+1)
+
+        # -- greedy acceptance: longest prefix where draft == target ------
+        ok = draft_blk == tgt[:, :-1]                          # (B, g)
+        ok_pad = jnp.pad(ok, ((0, 0), (0, 1)), constant_values=False)
+        n_acc = jnp.argmin(ok_pad, axis=1)                     # (B,)
+        corr = jnp.take_along_axis(tgt, n_acc[:, None], axis=1)  # (B, 1)
+        idx = jnp.arange(g + 1, dtype=n_acc.dtype)[None, :]
+        emitted = jnp.pad(draft_blk, ((0, 0), (0, 1)))
+        emitted = jnp.where(idx == n_acc[:, None], corr, emitted)
+
+        # -- rollback: keep pending + accepted drafts, drop the rest ------
+        t_cache = rollback_cache(t_cache, t_len0 + n_acc + 1)
+        self.draft_cache = rollback_cache(d_cache, d_len0 + n_acc + 1)
+
+        n_emit = np.asarray(n_acc) + 1
+        rows = list(active) if active is not None else range(int(B))
+        self.cycles += 1
+        self.proposed += len(rows) * g
+        self.accepted += int(sum(n_emit[i] for i in rows)) - len(rows)
+        return t_cache, SpecCycleResult(next_tokens=corr,
+                                        emitted=np.asarray(emitted),
+                                        n_emit=n_emit)

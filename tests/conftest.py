@@ -15,3 +15,32 @@ import pytest
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)
+
+
+class hypothesis_fallback:
+    """Stand-ins so property-test modules still import (and their plain
+    tests run) when ``hypothesis`` is not installed; the ``@given`` tests
+    themselves skip."""
+
+    @staticmethod
+    def given(*_a, **_k):
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+        return deco
+
+    @staticmethod
+    def settings(*_a, **_k):
+        return lambda fn: fn
+
+    class st:
+        @staticmethod
+        def integers(*_a, **_k):
+            return None
+
+        @staticmethod
+        def data(*_a, **_k):
+            return None
+
+        @staticmethod
+        def sampled_from(*_a, **_k):
+            return None

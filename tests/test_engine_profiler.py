@@ -88,6 +88,81 @@ def test_engine_matches_unbatched_decode():
     assert finished[0].tokens == want
 
 
+def test_engine_single_slot_batch():
+    """B=1: requests serialize through the single slot, outputs intact."""
+    cfg = dataclasses.replace(get_config("qwen2.5-14b").reduced(),
+                              n_layers=2)
+    params = init_params(cfg, KEY)
+    B, ctx = 1, 64
+    eng = _make_engine(cfg, params, B, ctx)
+    reqs = RequestGenerator(cfg.vocab, prompt_len=(4, 9), max_new=4,
+                            seed=5).generate(3)
+    cache = init_cache(cfg, B, ctx, dtype=jnp.float32)
+    finished, steps = eng.run(cache, reqs)
+    assert len(finished) == 3
+    assert {f.uid for f in finished} == {0, 1, 2}
+    for f in finished:
+        assert 1 <= len(f.tokens) <= 4
+
+
+def test_engine_slot_reuse_after_early_finish():
+    """A request hitting EOS frees its slot immediately; the next pending
+    request lands in that slot and still decodes correctly."""
+    cfg = dataclasses.replace(get_config("qwen2.5-14b").reduced(),
+                              n_layers=2)
+    params = init_params(cfg, KEY)
+    B, ctx = 2, 64
+    prompts = [np.asarray(jax.random.randint(jax.random.PRNGKey(i), (5,),
+                                             0, cfg.vocab))
+               for i in range(4)]
+    # pick the EOS id so request 0 finishes on its very first decode step
+    c1 = init_cache(cfg, 1, ctx, dtype=jnp.float32)
+    lg, c1 = prefill(params, cfg, jnp.asarray(prompts[0])[None], c1)
+    tok = jnp.argmax(lg[:, -1], -1)[:, None]
+    lg, _ = decode_step(params, cfg, c1, tok)
+    eos = int(jnp.argmax(lg[0, 0]))
+
+    eng = _make_engine(cfg, params, B, ctx)
+    eng.eos_id = eos
+
+    class Req:
+        def __init__(self, uid, prompt, max_new):
+            self.uid = uid
+            self.prompt = prompt
+            self.max_new_tokens = max_new
+
+    cache = init_cache(cfg, B, ctx, dtype=jnp.float32)
+    reqs = [Req(i, p, 8) for i, p in enumerate(prompts)]
+    finished, _ = eng.run(cache, reqs)
+    assert len(finished) == 4
+    by_uid = {f.uid: f for f in finished}
+    assert by_uid[0].tokens[-1] == eos or len(by_uid[0].tokens) == 8
+    # every request was served despite only two slots
+    assert all(len(f.tokens) >= 1 for f in finished)
+
+
+def test_engine_request_exceeding_context_budget():
+    """A request whose generation would overrun the cache context keeps
+    writing into the clamped last slot but still terminates at its token
+    budget (no crash, slot freed)."""
+    cfg = dataclasses.replace(get_config("qwen2.5-14b").reduced(),
+                              n_layers=2)
+    params = init_params(cfg, KEY)
+    B, ctx = 2, 16
+    eng = _make_engine(cfg, params, B, ctx)
+    prompt = np.asarray(jax.random.randint(KEY, (10,), 0, cfg.vocab))
+
+    class Req:
+        uid = 0
+        max_new_tokens = 32          # 10 + 32 >> ctx=16
+    Req.prompt = prompt
+    cache = init_cache(cfg, B, ctx, dtype=jnp.float32)
+    finished, steps = eng.run(cache, [Req()])
+    assert len(finished) == 1
+    assert len(finished[0].tokens) == 32
+    assert eng.free_slots() == [0, 1]
+
+
 def test_profiler_produces_usable_profile():
     prof = profile_local_device_noopt("ci")
     assert prof.cpu_flops["q4k"] > 1e8           # >0.1 GFLOP/s, surely

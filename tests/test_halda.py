@@ -4,7 +4,11 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # container lacks hypothesis
+    from conftest import hypothesis_fallback as _hf
+    given, settings, st = _hf.given, _hf.settings, _hf.st
 
 from repro.core import baselines, halda
 from repro.core.latency import classify_device, token_latency

@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from repro.kernels import ref
-from repro.kernels.flash_decode import flash_decode
+from repro.kernels.flash_decode import flash_decode, flash_verify
 from repro.kernels.q4_matmul import q4_matmul
 from repro.kernels.ssd_scan import ssd_scan
 from repro.quant import quantize_q4
@@ -50,6 +50,53 @@ def test_flash_decode_sweep(B, H, hkv, D, S, bs, window):
                        interpret=True)
     want = ref.flash_decode_ref(q, k, v, kv_len, window=window)
     np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("T", [1, 2, 4, 8])
+@pytest.mark.parametrize("B,H,hkv,D,S,bs", [
+    (2, 8, 2, 64, 512, 128),
+    (1, 4, 4, 128, 512, 256),    # MHA
+    (3, 8, 1, 64, 256, 256),     # MQA
+])
+def test_flash_verify_sweep(T, B, H, hkv, D, S, bs):
+    """Multi-query verify kernel vs the reference attention path, T draft
+    positions with causal masking among the drafts (1e-3 acceptance bar)."""
+    q = jax.random.normal(KEY, (B, T, H, D))
+    k = jax.random.normal(jax.random.PRNGKey(2), (B, S, hkv, D))
+    v = jax.random.normal(jax.random.PRNGKey(3), (B, S, hkv, D))
+    kv_len = jnp.asarray(
+        np.random.default_rng(T).integers(T, S + 1, size=B), jnp.int32)
+    out = flash_verify(q, k, v, kv_len, block_s=bs, interpret=True)
+    want = ref.flash_verify_ref(q, k, v, kv_len)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("T", [2, 4])
+def test_flash_verify_window(T):
+    B, H, hkv, D, S = 2, 8, 2, 64, 512
+    q = jax.random.normal(KEY, (B, T, H, D))
+    k = jax.random.normal(jax.random.PRNGKey(2), (B, S, hkv, D))
+    v = jax.random.normal(jax.random.PRNGKey(3), (B, S, hkv, D))
+    kv_len = jnp.asarray([S, S // 2], jnp.int32)
+    out = flash_verify(q, k, v, kv_len, window=64, block_s=128,
+                       interpret=True)
+    want = ref.flash_verify_ref(q, k, v, kv_len, window=64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_flash_verify_T1_matches_flash_decode():
+    """T = 1 must reduce to ordinary decode attention."""
+    B, H, hkv, D, S = 2, 8, 2, 64, 512
+    q = jax.random.normal(KEY, (B, 1, H, D))
+    k = jax.random.normal(jax.random.PRNGKey(2), (B, S, hkv, D))
+    v = jax.random.normal(jax.random.PRNGKey(3), (B, S, hkv, D))
+    kv_len = jnp.asarray([S, S // 3], jnp.int32)
+    out = flash_verify(q, k, v, kv_len, block_s=128, interpret=True)
+    want = flash_decode(q[:, 0], k, v, kv_len, block_s=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(out[:, 0]), np.asarray(want),
                                rtol=1e-5, atol=1e-5)
 
 

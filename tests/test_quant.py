@@ -3,7 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # container lacks hypothesis
+    from conftest import hypothesis_fallback as _hf
+    given, settings, st = _hf.given, _hf.settings, _hf.st
 
 from repro.quant import (dequantize_q2, dequantize_q4, pack_q4, quantize_q2,
                          quantize_q4, quantize_tree, unpack_q4,

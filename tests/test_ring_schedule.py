@@ -1,7 +1,11 @@
 """Ring schedule construction + the SPMD ring permutation."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # container lacks hypothesis
+    from conftest import hypothesis_fallback as _hf
+    given, settings, st = _hf.given, _hf.settings, _hf.st
 
 from repro.core.ring import build_schedule, validate_schedule
 from repro.runtime.serve import padded_layers, ring_permutation

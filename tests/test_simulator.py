@@ -101,3 +101,81 @@ def test_tp_slower_than_ring_on_wifi():
     ring = simulate_ring(devs, mp, [8] * 4, [0] * 4)
     tp = simulate_tp(devs, mp)
     assert tp.token_latency > ring.token_latency
+
+
+# --------------------------------------------------------------------------- #
+#  speculative decoding analytics (acceptance-aware TPOT/TPS)
+# --------------------------------------------------------------------------- #
+
+def test_verify_pass_cheaper_than_T_single_passes():
+    """A (gamma+1)-token verify pass streams weights once, so it must cost
+    far less than gamma+1 single-token passes in the disk-bound regime —
+    the amortization speculative decoding banks on. Both the analytic
+    model and the simulator must agree on the direction."""
+    from repro.core.latency import token_latency
+    devs = uniform_cluster()
+    mp = model(80, 0.48)               # overloads the cluster: disk-bound
+    w, n = [20] * 4, [0] * 4
+    T = 5
+    t1 = token_latency(devs, mp, w, n)
+    tT = token_latency(devs, mp, w, n, seq=T)
+    assert t1 < tT < 0.5 * T * t1
+    s1 = simulate_ring(devs, mp, w, n).token_latency
+    sT = simulate_ring(devs, mp, w, n, decode_seq=T).token_latency
+    assert s1 < sT < 0.5 * T * s1
+
+
+def test_token_latency_seq1_unchanged_by_seq_arg():
+    from repro.core.latency import token_latency
+    devs = uniform_cluster()
+    mp = model(80, 0.48)
+    w, n = [20] * 4, [0] * 4
+    assert token_latency(devs, mp, w, n) == \
+        token_latency(devs, mp, w, n, seq=1)
+
+
+def test_speculative_estimate_and_simulator_speedup():
+    """At acceptance 0.75+ the spec TPS model must beat vanilla decode,
+    and degrade gracefully to ~vanilla at acceptance 0."""
+    from repro.core.latency import speculative_estimate, token_latency
+    from repro.core.simulator import simulate_speculative
+    devs = uniform_cluster()
+    mp = model(80, 0.48)
+    w, n = [20] * 4, [0] * 4
+    t_vanilla = token_latency(devs, mp, w, n)
+    draft = 0.01 * t_vanilla
+    est = speculative_estimate(devs, mp, w, n, gamma=4, acceptance=0.8,
+                               draft_token_latency=draft)
+    assert est.speedup > 1.5
+    assert abs(est.tps * est.tpot - 1.0) < 1e-9
+    est0 = speculative_estimate(devs, mp, w, n, gamma=4, acceptance=0.0,
+                                draft_token_latency=draft)
+    assert est0.speedup < 1.0          # pure overhead when nothing accepted
+    # monotone in acceptance
+    prev = 0.0
+    for a in (0.25, 0.5, 0.75, 0.9):
+        e = speculative_estimate(devs, mp, w, n, gamma=4, acceptance=a,
+                                 draft_token_latency=draft)
+        assert e.tps > prev
+        prev = e.tps
+    # simulator-side: same direction
+    sim = simulate_speculative(devs, mp, w, n, gamma=4, acceptance=0.8,
+                               draft_token_latency=draft)
+    vanilla = simulate_ring(devs, mp, w, n).token_latency
+    assert sim.token_latency < vanilla
+    assert sim.tokens_per_cycle > 3.0
+
+
+def test_classify_cases_matches_scalar():
+    from repro.core.latency import classify_cases, classify_device
+    devs = uniform_cluster(4, ram_gib=4.0) + uniform_cluster(2, ram_gib=16.0)
+    mp = model(80, 0.48)
+    rng = np.random.default_rng(1)
+    for _ in range(50):
+        w = rng.integers(1, 30, len(devs)).tolist()
+        n = [0] * len(devs)
+        k = max(int(round(mp.n_layers / sum(w))), 1)
+        want = [int(classify_device(d, i, mp, w[i], n[i], k))
+                for i, d in enumerate(devs)]
+        got = classify_cases(devs, mp, w, n, k).tolist()
+        assert want == got

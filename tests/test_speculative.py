@@ -1,0 +1,275 @@
+"""Speculative decoding: multi-token verify correctness, greedy
+exact-match vs vanilla decode, rollback, acceptance bookkeeping, and the
+ContinuousBatcher integration."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import (decode_step, init_cache, init_params, prefill,
+                          rollback_cache)
+from repro.runtime.engine import ContinuousBatcher
+from repro.runtime.speculative import (SpeculativeDecoder,
+                                       expected_tokens_per_cycle)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _small(arch, n_layers=2):
+    return dataclasses.replace(get_config(arch).reduced(),
+                               n_layers=n_layers)
+
+
+def _greedy_reference(cfg, params, prompt, n_new, ctx=64):
+    c = init_cache(cfg, 1, ctx, dtype=jnp.float32)
+    lg, c = prefill(params, cfg, jnp.asarray(prompt)[None], c)
+    tok = jnp.argmax(lg[:, -1], -1)[:, None]
+    out = [int(tok[0, 0])]
+    for _ in range(n_new - 1):
+        lg, c = decode_step(params, cfg, c, tok)
+        tok = jnp.argmax(lg[:, 0], -1)[:, None]
+        out.append(int(tok[0, 0]))
+    return out
+
+
+# --------------------------------------------------------------------------- #
+#  multi-token decode_step == sequential decode_step
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("arch", ["qwen2.5-14b", "minicpm3-4b",
+                                  "qwen1.5-32b", "phi3.5-moe-42b-a6.6b"])
+def test_multi_token_decode_matches_sequential(arch):
+    cfg = _small(arch)
+    params = init_params(cfg, KEY)
+    B, ctx, T = 2, 64, 4
+    prompt = jax.random.randint(KEY, (B, 5), 0, cfg.vocab)
+    c = init_cache(cfg, B, ctx, dtype=jnp.float32)
+    _, c = prefill(params, cfg, prompt, c)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, T), 0, cfg.vocab)
+    c_seq = c
+    refs = []
+    for t in range(T):
+        lg, c_seq = decode_step(params, cfg, c_seq, toks[:, t:t + 1])
+        refs.append(lg[:, 0])
+    ref = jnp.stack(refs, 1)
+    out, c_v = decode_step(params, cfg, c, toks)
+    scale = float(jnp.max(jnp.abs(ref)))
+    assert float(jnp.max(jnp.abs(out - ref))) / scale < 1e-5
+    np.testing.assert_array_equal(np.asarray(c_v["len"]),
+                                  np.asarray(c_seq["len"]))
+
+
+def test_rollback_then_decode_matches_prefix():
+    """After rejecting draft positions, decoding from the rolled-back cache
+    must equal decoding from a cache that never saw the rejects."""
+    cfg = _small("qwen2.5-14b")
+    params = init_params(cfg, KEY)
+    B, ctx, T, keep = 2, 64, 4, 2
+    prompt = jax.random.randint(KEY, (B, 5), 0, cfg.vocab)
+    c0 = init_cache(cfg, B, ctx, dtype=jnp.float32)
+    _, c0 = prefill(params, cfg, prompt, c0)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, T), 0, cfg.vocab)
+
+    _, c_spec = decode_step(params, cfg, c0, toks)          # writes T
+    c_rb = rollback_cache(c_spec, c0["len"] + keep)
+
+    c_ref = c0
+    for t in range(keep):
+        _, c_ref = decode_step(params, cfg, c_ref, toks[:, t:t + 1])
+
+    probe = jax.random.randint(jax.random.PRNGKey(2), (B, 1), 0, cfg.vocab)
+    lg_rb, _ = decode_step(params, cfg, c_rb, probe)
+    lg_ref, _ = decode_step(params, cfg, c_ref, probe)
+    scale = float(jnp.max(jnp.abs(lg_ref)))
+    assert float(jnp.max(jnp.abs(lg_rb - lg_ref))) / scale < 1e-5
+
+
+# --------------------------------------------------------------------------- #
+#  SpeculativeDecoder: exact-match + acceptance bookkeeping
+# --------------------------------------------------------------------------- #
+
+def _spec_engine(t_cfg, t_params, d_cfg, d_params, B, ctx, gamma,
+                 eos_id=None):
+    def prefill_one(prompt):
+        c1 = init_cache(t_cfg, 1, ctx, dtype=jnp.float32)
+        logits, c1 = prefill(t_params, t_cfg, prompt, c1)
+        return int(jnp.argmax(logits[0, -1])), c1
+
+    def d_prefill_one(prompt):
+        c1 = init_cache(d_cfg, 1, ctx, dtype=jnp.float32)
+        logits, c1 = prefill(d_params, d_cfg, prompt, c1)
+        return int(jnp.argmax(logits[0, -1])), c1
+
+    def make_write_slot(B_):
+        def write_slot(cache, slot_cache, slot, length):
+            def wr(dst, src):
+                if dst.ndim >= 2 and dst.shape[1] == B_ \
+                        and src.shape[1] == 1:
+                    return dst.at[:, slot].set(src[:, 0])
+                return dst
+            new = jax.tree.map(wr, cache, slot_cache)
+            new["len"] = cache["len"].at[slot].set(slot_cache["len"][0])
+            return new
+        return write_slot
+
+    spec = SpeculativeDecoder(
+        lambda c, t: decode_step(d_params, d_cfg, c, t),
+        lambda c, t: decode_step(t_params, t_cfg, c, t),
+        gamma=gamma,
+        draft_cache=init_cache(d_cfg, B, ctx, dtype=jnp.float32),
+        draft_prefill_one=d_prefill_one,
+        draft_write_slot=make_write_slot(B))
+
+    eng = ContinuousBatcher(
+        B, prefill_one, make_write_slot(B),
+        lambda c, t: decode_step(t_params, t_cfg, c, t),
+        eos_id=eos_id, spec=spec)
+    return eng
+
+
+class _Req:
+    def __init__(self, uid, prompt, max_new):
+        self.uid = uid
+        self.prompt = prompt
+        self.max_new_tokens = max_new
+
+
+def test_speculative_exact_match_distinct_draft():
+    """Greedy speculative output == vanilla greedy target output, with an
+    *independent* draft model (imperfect acceptance)."""
+    gamma = 2
+    t_cfg = _small("qwen2.5-14b")
+    d_cfg = dataclasses.replace(t_cfg, d_model=32, d_ff=64, name="draft")
+    t_params = init_params(t_cfg, KEY)
+    d_params = init_params(d_cfg, jax.random.PRNGKey(9))
+    B, ctx, n_new = 2, 64, 10
+    prompts = [np.asarray(jax.random.randint(jax.random.PRNGKey(i), (5,),
+                                             0, t_cfg.vocab))
+               for i in range(3)]
+    want = [_greedy_reference(t_cfg, t_params, p, n_new, ctx)
+            for p in prompts]
+
+    eng = _spec_engine(t_cfg, t_params, d_cfg, d_params, B, ctx, gamma)
+    cache = init_cache(t_cfg, B, ctx, dtype=jnp.float32)
+    reqs = [_Req(i, p, n_new) for i, p in enumerate(prompts)]
+    finished, _ = eng.run(cache, reqs)
+    assert len(finished) == 3
+    got = {f.uid: f.tokens for f in finished}
+    for i in range(3):
+        assert got[i] == want[i], i
+    # an independent random draft should not be perfect
+    total_prop = sum(f.proposed for f in finished)
+    assert total_prop > 0
+
+
+def test_speculative_self_draft_accepts_everything():
+    """Draft == target => every draft token is accepted, and each cycle
+    emits gamma+1 tokens."""
+    cfg = _small("qwen2.5-14b")
+    params = init_params(cfg, KEY)
+    B, ctx, gamma, n_new = 1, 64, 3, 9
+    prompt = np.asarray(jax.random.randint(KEY, (5,), 0, cfg.vocab))
+    want = _greedy_reference(cfg, params, prompt, n_new, ctx)
+
+    eng = _spec_engine(cfg, params, cfg, params, B, ctx, gamma)
+    cache = init_cache(cfg, B, ctx, dtype=jnp.float32)
+    finished, steps = eng.run(cache, [_Req(0, prompt, n_new)])
+    assert finished[0].tokens == want
+    assert finished[0].accepted == finished[0].proposed  # all accepted
+    assert finished[0].acceptance_rate == 1.0
+    # 8 tokens decoded after the prefill token, gamma+1=4 per cycle
+    assert eng.spec.cycles == 2
+
+
+def test_speculative_budget_truncation():
+    """A cycle that overshoots the request budget must truncate: the slot
+    frees with exactly max_new tokens."""
+    cfg = _small("qwen2.5-14b")
+    params = init_params(cfg, KEY)
+    B, ctx, gamma, n_new = 1, 64, 3, 3   # cycle emits up to 4, budget 3
+    prompt = np.asarray(jax.random.randint(KEY, (5,), 0, cfg.vocab))
+    want = _greedy_reference(cfg, params, prompt, n_new, ctx)
+    eng = _spec_engine(cfg, params, cfg, params, B, ctx, gamma)
+    cache = init_cache(cfg, B, ctx, dtype=jnp.float32)
+    finished, _ = eng.run(cache, [_Req(0, prompt, n_new)])
+    assert finished[0].tokens == want
+    assert len(finished[0].tokens) == n_new
+
+
+def test_speculative_slot_reuse_after_early_finish():
+    """B=2 slots, 4 requests; a request finishing mid-stream frees its slot
+    for the next pending request, draft cache included."""
+    t_cfg = _small("qwen2.5-14b")
+    d_cfg = dataclasses.replace(t_cfg, d_model=32, d_ff=64, name="draft")
+    t_params = init_params(t_cfg, KEY)
+    d_params = init_params(d_cfg, jax.random.PRNGKey(9))
+    B, ctx = 2, 64
+    lens = [3, 9, 6, 4]
+    prompts = [np.asarray(jax.random.randint(jax.random.PRNGKey(i), (4,),
+                                             0, t_cfg.vocab))
+               for i in range(4)]
+    want = [_greedy_reference(t_cfg, t_params, p, n, ctx)
+            for p, n in zip(prompts, lens)]
+    eng = _spec_engine(t_cfg, t_params, d_cfg, d_params, B, ctx, gamma=2)
+    cache = init_cache(t_cfg, B, ctx, dtype=jnp.float32)
+    reqs = [_Req(i, p, n) for i, (p, n) in enumerate(zip(prompts, lens))]
+    finished, _ = eng.run(cache, reqs)
+    assert len(finished) == 4
+    got = {f.uid: f.tokens for f in finished}
+    for i in range(4):
+        assert got[i] == want[i], i
+
+
+def test_speculative_padded_vocab_logits():
+    """With vocab-padded logits (the ring verify step pads to a multiple
+    of tp), the decoder must slice before argmax — a zero pad column
+    would otherwise win whenever every real logit is negative."""
+    cfg = _small("qwen2.5-14b")
+    params = init_params(cfg, KEY)
+    B, ctx, gamma, n_new, pad = 1, 64, 2, 8, 32
+    prompt = np.asarray(jax.random.randint(KEY, (5,), 0, cfg.vocab))
+    want = _greedy_reference(cfg, params, prompt, n_new, ctx)
+
+    def padded(fn):
+        def wrapped(c, t):
+            lg, c = fn(c, t)
+            return jnp.pad(lg, ((0, 0), (0, 0), (0, pad))), c
+        return wrapped
+
+    def prefill_one(p):
+        c1 = init_cache(cfg, 1, ctx, dtype=jnp.float32)
+        logits, c1 = prefill(params, cfg, p, c1)
+        return int(jnp.argmax(logits[0, -1])), c1
+
+    def write_slot(cache, slot_cache, slot, length):
+        def wr(dst, src):
+            if dst.ndim >= 2 and dst.shape[1] == B and src.shape[1] == 1:
+                return dst.at[:, slot].set(src[:, 0])
+            return dst
+        new = jax.tree.map(wr, cache, slot_cache)
+        new["len"] = cache["len"].at[slot].set(slot_cache["len"][0])
+        return new
+
+    base = lambda c, t: decode_step(params, cfg, c, t)   # noqa: E731
+    spec = SpeculativeDecoder(
+        padded(base), padded(base), gamma=gamma, vocab=cfg.vocab,
+        draft_cache=init_cache(cfg, B, ctx, dtype=jnp.float32),
+        draft_prefill_one=prefill_one, draft_write_slot=write_slot)
+    eng = ContinuousBatcher(B, prefill_one, write_slot, base, spec=spec)
+    cache = init_cache(cfg, B, ctx, dtype=jnp.float32)
+    finished, _ = eng.run(cache, [_Req(0, prompt, n_new)])
+    assert finished[0].tokens == want
+    assert finished[0].acceptance_rate == 1.0    # self-draft
+
+
+def test_expected_tokens_per_cycle():
+    assert expected_tokens_per_cycle(0.0, 4) == 1.0
+    assert expected_tokens_per_cycle(1.0, 4) == 5.0
+    e = expected_tokens_per_cycle(0.75, 4)
+    assert 3.0 < e < 3.1                      # (1 - .75^5) / .25 ~ 3.051
+    # monotone in both arguments
+    assert expected_tokens_per_cycle(0.8, 4) > e
+    assert expected_tokens_per_cycle(0.75, 6) > e
