@@ -15,7 +15,7 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 SECTIONS = ("table3", "table4", "table6", "fig2", "fig8", "halda",
-            "kernels", "spec_decode", "roofline")
+            "kernels", "spec_decode", "streaming", "roofline")
 
 
 def _run_section(name: str, fn) -> None:
@@ -55,6 +55,9 @@ def main(argv=None) -> int:
     if "spec_decode" in wanted:
         from . import spec_decode
         _run_section("spec_decode", spec_decode.main)
+    if "streaming" in wanted:
+        from . import streaming
+        _run_section("streaming", streaming.main)
     if "roofline" in wanted:
         from . import roofline
         try:

@@ -26,7 +26,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from .latency import (DISK_SPEED_THRESHOLD, ObjectiveData, build_objective,
-                      classify_device, token_latency)
+                      classify_device, speculative_estimate, token_latency)
 from .profiles import OS, Case, DeviceProfile, ModelProfile, divisors
 
 try:  # HiGHS via scipy
@@ -35,6 +35,10 @@ try:  # HiGHS via scipy
     _HAVE_SCIPY = True
 except Exception:  # pragma: no cover - exercised via force_fallback tests
     _HAVE_SCIPY = False
+
+
+#: one ILP candidate: (w, n, k, analytic token latency)
+Candidate = Tuple[Tuple[int, ...], Tuple[int, ...], int, float]
 
 
 @dataclasses.dataclass
@@ -47,10 +51,72 @@ class HaldaSolution:
     iterations: int
     relaxed: bool = False           # memory-consistency constraints dropped
     history: List[Tuple[int, float]] = dataclasses.field(default_factory=list)
+    # every distinct (w, n, k) assignment the search evaluated — input to
+    # the optional speculative post-pass
+    candidates: List[Candidate] = dataclasses.field(default_factory=list)
+    # filled by solve(..., spec=SpecPostPass(...))
+    spec_report: Optional[List[dict]] = None
 
     @property
     def window_total(self) -> int:
         return sum(self.w)
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecPostPass:
+    """Inputs for the optional speculative post-pass on a Halda solve."""
+
+    gamma: int = 4
+    acceptance: float = 0.8
+    draft_token_latency: float = 5e-3
+    top: int = 8                     # candidates reported (by vanilla TPOT)
+
+
+def speculative_post_pass(devices: Sequence[DeviceProfile],
+                          model: ModelProfile, sol: "HaldaSolution",
+                          spec: SpecPostPass) -> List[dict]:
+    """Report each candidate assignment's TPOT with and without speculation.
+
+    First step on the ROADMAP item of making Halda speculation-aware: the
+    ILP still optimizes the vanilla decode objective, but the post-pass
+    prices every candidate it visited under the acceptance-aware model
+    (``latency.speculative_estimate``) so callers can see when the
+    speculative ordering disagrees with the vanilla one — i.e. when a
+    slightly slower vanilla assignment amortizes a gamma+1-token verify
+    pass better (more streamed layers -> bigger once-per-pass win).
+    """
+    cands = list(sol.candidates)
+    # the final assignment may differ from every ILP candidate (rebalance)
+    cands.append((tuple(sol.w), tuple(sol.n), sol.k, sol.latency))
+    # dedupe on the assignment, keep the best vanilla latency per key
+    best: Dict[Tuple, Candidate] = {}
+    for w, n, k, lat in cands:
+        key = (w, n, k)
+        if key not in best or lat < best[key][3]:
+            best[key] = (w, n, k, lat)
+    ordered = sorted(best.values(), key=lambda c: c[3])[:spec.top]
+    rows = []
+    for w, n, k, obj in ordered:
+        # re-price vanilla under auto-classification so the two columns
+        # are comparable (the solver's objective value is computed under
+        # its assumed case assignment, which can differ)
+        t_van = token_latency(devices, model, list(w), list(n))
+        est = speculative_estimate(
+            devices, model, list(w), list(n), gamma=spec.gamma,
+            acceptance=spec.acceptance,
+            draft_token_latency=spec.draft_token_latency)
+        rows.append({
+            "w": list(w), "n": list(n), "k": k,
+            "objective": obj,
+            "tpot_vanilla": t_van,
+            "tpot_spec": est.tpot,
+            "spec_speedup": est.speedup,
+            "tokens_per_cycle": est.tokens_per_cycle,
+            "chosen": list(w) == list(sol.w) and list(n) == list(sol.n)
+                      and k == sol.k,
+        })
+    rows.sort(key=lambda r: r["tpot_vanilla"])
+    return rows
 
 
 # ---------------------------------------------------------------------------
@@ -274,6 +340,7 @@ def solve_exact(devices: Sequence[DeviceProfile], model: ModelProfile, *,
             choices.append((overload_case(dev), Case.M4))
     best: Optional[HaldaSolution] = None
     history: List[Tuple[int, float]] = []
+    cands: List[Candidate] = []
     for cases in itertools.product(*choices):
         obj = build_objective(devices, model, list(cases))
         for k in ks:
@@ -284,18 +351,36 @@ def solve_exact(devices: Sequence[DeviceProfile], model: ModelProfile, *,
             wk, nk, _ = out
             lat = token_latency(devices, model, wk, nk, cases)
             history.append((k, lat))
+            cands.append((tuple(wk), tuple(nk), k, lat))
             if best is None or lat < best.latency:
                 best = HaldaSolution(w=wk, n=nk, k=k, cases=list(cases),
                                      latency=lat, iterations=0,
                                      history=history)
+    if best is not None:
+        best.candidates = cands
     return best
 
 
 def solve(devices: Sequence[DeviceProfile], model: ModelProfile, *,
           max_iters: int = 32, force_fallback: bool = False,
-          paper_faithful: bool = False) -> HaldaSolution:
+          paper_faithful: bool = False,
+          spec: Optional[SpecPostPass] = None) -> HaldaSolution:
     """Run Halda (Algorithm 1); unless ``paper_faithful``, refine with the
-    exact case-enumeration search and return the better of the two."""
+    exact case-enumeration search and return the better of the two.
+
+    ``spec``: optional speculative post-pass — prices every candidate
+    assignment with and without speculation (``sol.spec_report``)."""
+    sol = _solve_inner(devices, model, max_iters=max_iters,
+                       force_fallback=force_fallback,
+                       paper_faithful=paper_faithful)
+    if spec is not None:
+        sol.spec_report = speculative_post_pass(devices, model, sol, spec)
+    return sol
+
+
+def _solve_inner(devices: Sequence[DeviceProfile], model: ModelProfile, *,
+                 max_iters: int = 32, force_fallback: bool = False,
+                 paper_faithful: bool = False) -> HaldaSolution:
     M = len(devices)
     L = model.n_layers
     if M == 1:
@@ -307,9 +392,10 @@ def solve(devices: Sequence[DeviceProfile], model: ModelProfile, *,
             if dev.has_gpu else 0
         n = [max(0, min(L, cap))]
         cases = [classify_device(dev, 0, model, w[0], n[0], 1)]
-        return HaldaSolution(w=w, n=n, k=1, cases=cases,
-                             latency=token_latency(devices, model, w, n),
-                             iterations=0)
+        lat = token_latency(devices, model, w, n)
+        return HaldaSolution(w=w, n=n, k=1, cases=cases, latency=lat,
+                             iterations=0,
+                             candidates=[(tuple(w), tuple(n), 1, lat)])
 
     ks = [k for k in divisors(L) if L // k >= M]
     if not ks:
@@ -322,6 +408,7 @@ def solve(devices: Sequence[DeviceProfile], model: ModelProfile, *,
     best: Optional[HaldaSolution] = None
     relaxed_mode = False
     history: List[Tuple[int, float]] = []
+    cands: List[Candidate] = []
 
     for it in range(max_iters):
         W = sum(w)
@@ -344,6 +431,7 @@ def solve(devices: Sequence[DeviceProfile], model: ModelProfile, *,
             wk, nk, _ = out
             lat = token_latency(devices, model, wk, nk, cases)
             history.append((k, lat))
+            cands.append((tuple(wk), tuple(nk), k, lat))
             if round_best is None or lat < round_best[2]:
                 round_best = (wk, nk, lat, k)
 
@@ -390,10 +478,14 @@ def solve(devices: Sequence[DeviceProfile], model: ModelProfile, *,
                              history=history)
     if not paper_faithful:
         exact = solve_exact(devices, model, force_fallback=force_fallback)
-        if exact is not None and exact.latency < best.latency:
-            exact = dataclasses.replace(exact, iterations=best.iterations)
-            best = exact
+        if exact is not None:
+            cands.extend(exact.candidates)
+            if exact.latency < best.latency:
+                exact = dataclasses.replace(exact,
+                                            iterations=best.iterations)
+                best = exact
         best = _rebalance(devices, model, best)
+    best.candidates = cands
     return best
 
 

@@ -481,6 +481,66 @@ def speculative_estimate(devices: Sequence[DeviceProfile],
                         speedup=tps * t_vanilla)
 
 
+@dataclasses.dataclass(frozen=True)
+class StreamingCheck:
+    """Measured prefetch timeline vs the analytic disk term."""
+
+    predicted_layer_s: float     # layer_bytes / disk_speed (model term)
+    measured_layer_s: float      # median staged-read time per layer
+    measured_bps: float          # aggregate staging throughput
+    modeled_bps: float           # the profile's disk_speed()
+    ratio: float                 # measured_layer_s / predicted_layer_s
+
+    @property
+    def consistent(self) -> bool:
+        """Within an order of magnitude — the model is a scheduler input,
+        not a cycle-accurate simulator; page cache and file-open overhead
+        move absolute numbers while relative ordering survives."""
+        return 0.1 <= self.ratio <= 10.0
+
+
+def streaming_disk_term(dev: DeviceProfile, layer_bytes: float) -> float:
+    """Seconds the latency model charges to stream one layer from disk —
+    the per-layer unit inside the M1-M3 ``b'/s_disk`` objective terms."""
+    return layer_bytes / dev.disk_speed()
+
+
+def median_event_duration(events: Sequence) -> float:
+    """Median duration of a prefetch timeline (single definition, shared
+    with ``runtime.streaming.PrefetchStats``). Zero-byte events (ring
+    padding rows) are excluded."""
+    durs = sorted(e.duration for e in events if e.nbytes > 0)
+    return durs[len(durs) // 2] if durs else 0.0
+
+
+def aggregate_bps(events: Sequence) -> float:
+    """Aggregate staging throughput of a prefetch timeline."""
+    nbytes = sum(e.nbytes for e in events)
+    span = sum(e.duration for e in events)
+    return nbytes / max(span, 1e-12)
+
+
+def streaming_crosscheck(dev: DeviceProfile, layer_bytes: float,
+                         events: Sequence) -> StreamingCheck:
+    """Cross-check the analytic disk terms against a measured prefetch
+    timeline (``runtime.streaming.PrefetchEvent`` list: each event is one
+    background layer read into staging).
+
+    This closes the loop the paper's profiler opens: the same quantity —
+    seconds per streamed layer — exists both as a model coefficient
+    (``layer_bytes / disk_speed``) and as a measurement (the prefetcher's
+    per-layer read durations), so a profile whose disk numbers drift from
+    reality is detectable rather than silently mis-scheduling.
+    """
+    predicted = streaming_disk_term(dev, layer_bytes)
+    measured = median_event_duration(events)
+    measured_bps = aggregate_bps(events)
+    return StreamingCheck(
+        predicted_layer_s=predicted, measured_layer_s=measured,
+        measured_bps=measured_bps, modeled_bps=dev.disk_speed(),
+        ratio=measured / max(predicted, 1e-12))
+
+
 def ttft(devices: Sequence[DeviceProfile], model: ModelProfile,
          w: Sequence[int], n: Sequence[int], prompt_len: int = 16) -> float:
     """Time-to-first-token: prefill modelled as one pass whose compute and

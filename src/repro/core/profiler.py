@@ -93,6 +93,67 @@ def measure_disk(nbytes: int = 64 << 20, path: Optional[str] = None
         os.unlink(tmp)
 
 
+def measure_disk_random(nbytes: int = 32 << 20, block: int = 1 << 20,
+                        path: Optional[str] = None, seed: int = 0) -> float:
+    """Random-offset read bytes/s (the macOS-style mmap reload pattern,
+    ``DeviceProfile.disk_rand_bps``). Reads ``block``-sized chunks at
+    shuffled offsets of a fresh file."""
+    fd, tmp = tempfile.mkstemp(dir=path)
+    try:
+        blob = np.random.default_rng(seed).bytes(nbytes)
+        with os.fdopen(fd, "wb") as f:
+            f.write(blob)
+        offsets = np.arange(0, nbytes, block)
+        np.random.default_rng(seed + 1).shuffle(offsets)
+
+        def read():
+            with open(tmp, "rb") as f:
+                for off in offsets:
+                    f.seek(int(off))
+                    f.read(block)
+
+        dt = _median_time(read, warmup=1, iters=3)
+        return nbytes / dt
+    finally:
+        os.unlink(tmp)
+
+
+def measure_stream_read(layer_nbytes: int = 8 << 20, n_layers: int = 4,
+                        path: Optional[str] = None) -> float:
+    """Bytes/s of the weight-streaming access pattern itself: per-layer
+    flat files read end to end through mmap with a private staging copy —
+    exactly what ``runtime.streaming.LayerPrefetcher`` does per layer.
+    This is the probe the streaming disk terms in ``core.latency`` should
+    be fed from (``measure_disk`` reads one big file; the layer-sharded
+    store pays per-file open/fault overhead too)."""
+    import mmap as _mmap
+
+    d = tempfile.mkdtemp(dir=path)
+    files = []
+    try:
+        blob = np.random.default_rng(0).bytes(layer_nbytes)
+        for i in range(n_layers):
+            p = os.path.join(d, f"layer_{i:05d}.bin")
+            with open(p, "wb") as f:
+                f.write(blob)
+            files.append(p)
+
+        def read():
+            for p in files:
+                with open(p, "rb") as f:
+                    mm = _mmap.mmap(f.fileno(), 0,
+                                    access=_mmap.ACCESS_READ)
+                    np.array(np.frombuffer(mm, dtype=np.uint8), copy=True)
+                    mm.close()
+
+        dt = _median_time(read, warmup=1, iters=3)
+        return n_layers * layer_nbytes / dt
+    finally:
+        for p in files:
+            os.unlink(p)
+        os.rmdir(d)
+
+
 def profile_local_device(name: str = "local", *, quick: bool = True
                          ) -> DeviceProfile:
     """Build a DeviceProfile of this machine for the Halda scheduler."""
@@ -105,12 +166,18 @@ def profile_local_device(name: str = "local", *, quick: bool = True
     flops = measure_flops(512 if quick else 2048)
     membw = measure_membw(1 << 24 if quick else 1 << 28)
     kv = measure_kv_copy()
-    disk = measure_disk(8 << 20 if quick else 256 << 20)
+    # disk_seq_bps feeds the Linux mmap-reload term of the latency model,
+    # so probe the streaming access pattern itself (per-layer files
+    # through mmap + staging copy), bounded above by the raw read path
+    seq = min(measure_disk(8 << 20 if quick else 256 << 20),
+              measure_stream_read(1 << 20 if quick else 16 << 20,
+                                  n_layers=4))
+    rand = measure_disk_random(4 << 20 if quick else 64 << 20)
     return DeviceProfile(
         name=name, os=OS.LINUX, ram_avail=ram_avail,
         cpu_flops={q: flops for q in QUANTS},
         cpu_membw=membw, t_kv_copy_cpu=kv,
-        disk_seq_bps=disk, disk_rand_bps=disk * 0.6,
+        disk_seq_bps=seq, disk_rand_bps=rand,
         t_comm=1e-4)
 
 
@@ -119,10 +186,11 @@ def profile_local_device_noopt(name: str = "local") -> DeviceProfile:
     flops = measure_flops(512)
     membw = measure_membw(1 << 24)
     kv = measure_kv_copy()
-    disk = measure_disk(8 << 20)
+    seq = min(measure_disk(8 << 20), measure_stream_read(1 << 20))
+    rand = measure_disk_random(4 << 20)
     return DeviceProfile(
         name=name, os=OS.LINUX, ram_avail=8 * GiB,
         cpu_flops={q: flops for q in QUANTS},
         cpu_membw=membw, t_kv_copy_cpu=kv,
-        disk_seq_bps=disk, disk_rand_bps=disk * 0.6,
+        disk_seq_bps=seq, disk_rand_bps=rand,
         t_comm=1e-4)

@@ -1,5 +1,7 @@
-from .model import (decode_step, forward, init_cache, init_params, prefill,
-                    rollback_cache, whisper_encode)
+from .model import (decode_step, decode_step_layerwise, forward,
+                    forward_layerwise, init_cache, init_params, prefill,
+                    prefill_layerwise, rollback_cache, whisper_encode)
 
-__all__ = ["decode_step", "forward", "init_cache", "init_params", "prefill",
-           "rollback_cache", "whisper_encode"]
+__all__ = ["decode_step", "decode_step_layerwise", "forward",
+           "forward_layerwise", "init_cache", "init_params", "prefill",
+           "prefill_layerwise", "rollback_cache", "whisper_encode"]

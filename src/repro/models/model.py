@@ -474,6 +474,114 @@ def decode_step(params: Params, cfg: ModelConfig, cache: Dict,
     return unembed(params, cfg, x), new_cache
 
 
+# --------------------------------------------------------------------------- #
+#  layer-wise paths (weight streaming)
+# --------------------------------------------------------------------------- #
+#
+# The scan paths above close over the full stacked parameter pytree — all
+# L layers resident. The layer-wise paths pull each layer's weights from a
+# ``runtime.paramstore.ParamSource`` right before applying it, which is
+# what lets the streaming runtime keep only a window of layers in memory
+# (prefetch ahead of the front, release behind it). The math is the exact
+# per-layer sequence the scan performs, so resident and streamed decode
+# agree to numerical tolerance.
+
+def _layerwise_backbone(source, cfg: ModelConfig, x, positions, cache, *,
+                        decode: bool, tp_axis: Optional[str]):
+    """Run the stack one layer at a time, weights pulled from ``source``."""
+    if cfg.family not in ("dense", "moe", "vlm", "ssm"):
+        raise ValueError(
+            f"layer-wise streaming unsupported for family {cfg.family}")
+    ln = None if cache is None else cache["len"]
+    layers_c = None if cache is None else cache["layers"]
+    new_layers = layers_c
+    for i in range(cfg.n_layers):
+        p = source.layer(i)
+        c_i = None if layers_c is None else jax.tree.map(
+            lambda a: a[i], layers_c)
+        if cfg.family == "ssm":
+            x, nc = _ssd_full_block(cfg, p, x, c_i, decode=decode,
+                                    tp_axis=tp_axis)
+        else:
+            x, nc = _dense_block(cfg, p, x, positions, c_i, ln,
+                                 decode=decode, tp_axis=tp_axis)
+        x = _constrain(x)
+        if nc is not None:
+            new_layers = jax.tree.map(
+                lambda full, n: full.at[i].set(n), new_layers, nc)
+    new_cache = None
+    if cache is not None:
+        new_cache = dict(cache)
+        new_cache["layers"] = new_layers
+        new_cache["len"] = ln + x.shape[1]
+    return x, new_cache
+
+
+def forward_layerwise(source, cfg: ModelConfig, tokens: jnp.ndarray, *,
+                      embeds: Optional[jnp.ndarray] = None,
+                      positions: Optional[jnp.ndarray] = None,
+                      tp_axis: Optional[str] = None) -> jnp.ndarray:
+    """``forward`` with weights pulled from a ParamSource."""
+    head = source.head()
+    x = embed_tokens(head, cfg, tokens)
+    if embeds is not None:
+        x = jnp.concatenate([embeds.astype(x.dtype), x], axis=1)
+    x = _constrain(x)
+    B, S, _ = x.shape
+    if positions is None:
+        positions = default_positions(cfg, B, S)
+    x, _ = _layerwise_backbone(source, cfg, x, positions, None,
+                               decode=False, tp_axis=tp_axis)
+    x = ll.rms_norm(x, head["final_norm"], cfg.norm_eps)
+    return unembed(head, cfg, x)
+
+
+def prefill_layerwise(source, cfg: ModelConfig, tokens: jnp.ndarray,
+                      cache: Dict, *,
+                      embeds: Optional[jnp.ndarray] = None,
+                      positions: Optional[jnp.ndarray] = None,
+                      tp_axis: Optional[str] = None
+                      ) -> Tuple[jnp.ndarray, Dict]:
+    """``prefill`` with weights pulled from a ParamSource."""
+    head = source.head()
+    x = embed_tokens(head, cfg, tokens)
+    if embeds is not None:
+        x = jnp.concatenate([embeds.astype(x.dtype), x], axis=1)
+    x = _constrain(x)
+    B, S, _ = x.shape
+    if positions is None:
+        positions = default_positions(cfg, B, S)
+    x, new_cache = _layerwise_backbone(source, cfg, x, positions, cache,
+                                       decode=False, tp_axis=tp_axis)
+    x = ll.rms_norm(x[:, -1:], head["final_norm"], cfg.norm_eps)
+    return unembed(head, cfg, x), new_cache
+
+
+def decode_step_layerwise(source, cfg: ModelConfig, cache: Dict,
+                          tokens: jnp.ndarray, *,
+                          tp_axis: Optional[str] = None
+                          ) -> Tuple[jnp.ndarray, Dict]:
+    """``decode_step`` with weights pulled from a ParamSource.
+
+    Supports the same T > 1 speculative verify semantics as
+    ``decode_step`` — a streamed verify pass reads each layer from disk
+    once for the whole draft block, which is the amortization the
+    acceptance-aware latency model prices.
+    """
+    B, T = tokens.shape
+    if T > 1 and cfg.family not in ("dense", "moe", "vlm"):
+        raise ValueError(f"multi-token decode unsupported for {cfg.family}")
+    head = source.head()
+    x = embed_tokens(head, cfg, tokens)
+    pos = cache["len"][:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]
+    if cfg.mrope:
+        pos = jnp.broadcast_to(pos[None], (3, B, T))
+    x, new_cache = _layerwise_backbone(source, cfg, x, pos, cache,
+                                       decode=True, tp_axis=tp_axis)
+    x = ll.rms_norm(x, head["final_norm"], cfg.norm_eps)
+    return unembed(head, cfg, x), new_cache
+
+
 def rollback_cache(cache: Dict, new_len: jnp.ndarray) -> Dict:
     """Roll rejected speculative positions out of a KV cache.
 

@@ -1,1 +1,2 @@
-from . import checkpoint, elastic, optim, serve, sharding, train  # noqa
+from . import (checkpoint, elastic, optim, paramstore, serve, sharding,
+               streaming, train)  # noqa

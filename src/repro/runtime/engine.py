@@ -62,19 +62,33 @@ class ContinuousBatcher:
     emitted streams stay byte-identical to vanilla greedy decode. The
     decoder owns the draft-side cache; per-slot acceptance counters land
     on ``SlotState``/``FinishedRequest``.
+
+    ``source``: optional ``runtime.paramstore.ParamSource`` the decode
+    callables pull weights from (``streaming.make_streaming_engine``
+    wires this). The engine itself stays weight-agnostic; holding the
+    source lets callers reach prefetch statistics
+    (``engine.streaming_stats()``) and guarantees its lifetime spans the
+    serving loop.
     """
 
     def __init__(self, batch: int, prefill_one: Callable,
                  write_slot: Callable, decode: Callable,
-                 *, eos_id: Optional[int] = None, spec=None):
+                 *, eos_id: Optional[int] = None, spec=None, source=None):
         self.B = batch
         self.prefill_one = prefill_one
         self.write_slot = write_slot
         self.decode = decode
         self.eos_id = eos_id
         self.spec = spec
+        self.source = source
         self.slots = [SlotState() for _ in range(batch)]
         self.finished: List[FinishedRequest] = []
+
+    def streaming_stats(self):
+        """Prefetch statistics of the attached streaming source (or None)."""
+        if self.source is not None and hasattr(self.source, "stats"):
+            return self.source.stats()
+        return None
 
     # ------------------------------------------------------------------ #
 

@@ -1,0 +1,315 @@
+"""Layer-sharded, mmap-backed parameter store.
+
+The paper's low-RAM regime keeps model weights on disk (mmap'd) and
+streams a *window* of layers through memory; prima.cpp inherits
+llama.cpp's single-file GGUF mmap. Here the store is **layer-sharded**:
+each decoder layer's leaves are packed into one flat file
+(``layer_00017.bin``) next to a JSON manifest, so
+
+  * a layer is one sequential read (the unit the latency model prices as
+    ``layer_bytes / disk_speed``),
+  * releasing a layer behind the compute front is one ``madvise`` on one
+    mapping — prefetch (ahead of the front) and release (behind it) touch
+    disjoint files and can never fight over the same pages (the paper's
+    prefetch-release conflict, §3.1),
+  * the head (embedding / final norm / lm head) lives in ``head.bin`` and
+    stays resident, mirroring the paper's head-device accounting.
+
+``ParamStore.layer(i)`` returns zero-copy numpy views into the mapping;
+the async prefetcher (``runtime.streaming``) copies them into staging
+buffers off-thread. ``ResidentSource`` adapts an in-memory pytree to the
+same ``ParamSource`` interface so every layer-wise consumer can run
+resident or streamed without branching.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import mmap
+import os
+from typing import Any, Dict, Iterator, List, Tuple
+
+import jax
+import numpy as np
+
+Params = Dict[str, Any]
+
+MANIFEST = "manifest.json"
+HEAD_FILE = "head.bin"
+
+#: families whose per-layer stack lives under params["blocks"] with a
+#: leading layer axis — the layout the store shards.
+STACKED_FAMILIES = ("dense", "moe", "vlm", "ssm")
+
+
+def _np_dtype(name: str) -> np.dtype:
+    if name == "bfloat16":
+        import ml_dtypes
+
+        return np.dtype(ml_dtypes.bfloat16)
+    return np.dtype(name)
+
+
+def _dtype_name(dt) -> str:
+    return np.dtype(dt).name if np.dtype(dt).name != "void" else str(dt)
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSpec:
+    """One leaf inside a flat layer (or head) file."""
+
+    key: str                 # "/"-joined dict path, e.g. "attn/wq"
+    shape: Tuple[int, ...]   # per-layer shape (layer axis stripped)
+    dtype: str
+    offset: int              # byte offset inside the file
+    nbytes: int
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "LeafSpec":
+        return cls(key=d["key"], shape=tuple(d["shape"]), dtype=d["dtype"],
+                   offset=d["offset"], nbytes=d["nbytes"])
+
+    def to_dict(self) -> dict:
+        return {"key": self.key, "shape": list(self.shape),
+                "dtype": self.dtype, "offset": self.offset,
+                "nbytes": self.nbytes}
+
+
+def _iter_leaves(tree: Params, prefix: str = "") -> Iterator[Tuple[str, Any]]:
+    """Deterministic (sorted) walk of a nested-dict pytree."""
+    for k in sorted(tree):
+        v = tree[k]
+        path = f"{prefix}{k}"
+        if isinstance(v, dict):
+            yield from _iter_leaves(v, path + "/")
+        else:
+            yield path, v
+
+
+def _unflatten(leaves: Dict[str, Any]) -> Params:
+    out: Params = {}
+    for key, v in leaves.items():
+        parts = key.split("/")
+        node = out
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = v
+    return out
+
+
+def _layer_file(i: int) -> str:
+    return f"layer_{i:05d}.bin"
+
+
+# --------------------------------------------------------------------------- #
+#  save
+# --------------------------------------------------------------------------- #
+
+def save_param_store(params: Params, cfg, directory: str) -> str:
+    """Persist ``params`` as a layer-sharded store; returns ``directory``.
+
+    ``params["blocks"]`` leaves must be layer-stacked (leading L axis) —
+    the layout ``models.init_params`` produces for dense/moe/vlm/ssm.
+    Quantized ring banks are not supported (convert before quantizing).
+    """
+    if cfg.family not in STACKED_FAMILIES:
+        raise ValueError(f"param store unsupported for family {cfg.family}")
+    os.makedirs(directory, exist_ok=True)
+    L = cfg.n_layers
+
+    layer_specs: List[dict] = []
+    offset = 0
+    # one device->host transfer per leaf (not per leaf per layer)
+    flat = [(key, np.asarray(leaf))
+            for key, leaf in _iter_leaves(params["blocks"])]
+    for key, arr in flat:
+        if arr.shape[0] != L:
+            raise ValueError(f"{key}: leading axis {arr.shape[0]} != L={L}")
+        per = arr[0]
+        layer_specs.append(LeafSpec(
+            key=key, shape=tuple(per.shape), dtype=_dtype_name(arr.dtype),
+            offset=offset, nbytes=per.nbytes).to_dict())
+        offset += per.nbytes
+    layer_nbytes = offset
+
+    for i in range(L):
+        with open(os.path.join(directory, _layer_file(i)), "wb") as f:
+            for key, arr in flat:
+                f.write(np.ascontiguousarray(arr[i]).tobytes())
+
+    head_specs: List[dict] = []
+    offset = 0
+    head_tree = {k: v for k, v in params.items() if k != "blocks"}
+    head_flat = list(_iter_leaves(head_tree))
+    with open(os.path.join(directory, HEAD_FILE), "wb") as f:
+        for key, leaf in head_flat:
+            arr = np.ascontiguousarray(np.asarray(leaf))
+            head_specs.append(LeafSpec(
+                key=key, shape=tuple(arr.shape),
+                dtype=_dtype_name(arr.dtype), offset=offset,
+                nbytes=arr.nbytes).to_dict())
+            f.write(arr.tobytes())
+            offset += arr.nbytes
+
+    manifest = {
+        "version": 1,
+        "model": cfg.name,
+        "family": cfg.family,
+        "n_layers": L,
+        "layer_nbytes": layer_nbytes,
+        "leaves": layer_specs,
+        "head_leaves": head_specs,
+    }
+    with open(os.path.join(directory, MANIFEST), "w") as f:
+        json.dump(manifest, f, indent=2)
+        f.write("\n")
+    return directory
+
+
+# --------------------------------------------------------------------------- #
+#  sources
+# --------------------------------------------------------------------------- #
+
+class ParamSource:
+    """Layer-wise parameter access: what the layer-wise forward consumes.
+
+    ``layer(i)`` returns the per-layer block pytree (no leading layer
+    axis); ``head()`` the non-block params (embed / final_norm / unembed).
+    Implementations: ``ResidentSource`` (in-memory pytree, the parity
+    baseline), ``ParamStore`` (cold mmap reads), and
+    ``streaming.StreamingParamSource`` (async prefetch window).
+    """
+
+    n_layers: int
+
+    def layer(self, i: int) -> Params:
+        raise NotImplementedError
+
+    def head(self) -> Params:
+        raise NotImplementedError
+
+    def close(self) -> None:
+        pass
+
+
+class ResidentSource(ParamSource):
+    """Adapt a fully-resident stacked pytree to the ParamSource interface."""
+
+    def __init__(self, params: Params):
+        self._params = params
+        self.n_layers = int(
+            jax.tree.leaves(params["blocks"])[0].shape[0])
+
+    def layer(self, i: int) -> Params:
+        return jax.tree.map(lambda a: a[i], self._params["blocks"])
+
+    def head(self) -> Params:
+        return {k: v for k, v in self._params.items() if k != "blocks"}
+
+
+class ParamStore(ParamSource):
+    """Read side of the layer-sharded store (one mmap per layer file).
+
+    ``layer(i)`` returns numpy views into the mapping — pages fault in on
+    first touch (the "mmap offloading" the paper starts from).
+    ``release(i)`` advises the kernel to drop layer i's pages
+    (``MADV_DONTNEED``), the explicit release half of the
+    prefetch-release fix; it is a no-op where madvise is unavailable.
+    """
+
+    def __init__(self, directory: str):
+        self.directory = directory
+        with open(os.path.join(directory, MANIFEST)) as f:
+            m = json.load(f)
+        self.manifest = m
+        self.n_layers = int(m["n_layers"])
+        self.layer_nbytes = int(m["layer_nbytes"])
+        self.family = m["family"]
+        self._leaves = [LeafSpec.from_dict(d) for d in m["leaves"]]
+        self._head_leaves = [LeafSpec.from_dict(d) for d in m["head_leaves"]]
+        self._maps: Dict[int, mmap.mmap] = {}
+        self._files: Dict[int, Any] = {}
+        self.released = 0          # release() calls that actually dropped
+
+    # -- mapping lifecycle ------------------------------------------------ #
+
+    def _map(self, i: int) -> mmap.mmap:
+        mm = self._maps.get(i)
+        if mm is None:
+            f = open(os.path.join(self.directory, _layer_file(i)), "rb")
+            mm = mmap.mmap(f.fileno(), 0, access=mmap.ACCESS_READ)
+            self._files[i] = f
+            self._maps[i] = mm
+        return mm
+
+    def layer(self, i: int) -> Params:
+        if not 0 <= i < self.n_layers:
+            raise IndexError(i)
+        mm = self._map(i)
+        buf = np.frombuffer(mm, dtype=np.uint8, count=self.layer_nbytes)
+        leaves = {}
+        for spec in self._leaves:
+            raw = buf[spec.offset:spec.offset + spec.nbytes]
+            leaves[spec.key] = raw.view(_np_dtype(spec.dtype)).reshape(
+                spec.shape)
+        return _unflatten(leaves)
+
+    def head(self) -> Params:
+        path = os.path.join(self.directory, HEAD_FILE)
+        leaves = {}
+        with open(path, "rb") as f:
+            raw = f.read()
+        buf = np.frombuffer(raw, dtype=np.uint8)
+        for spec in self._head_leaves:
+            chunk = buf[spec.offset:spec.offset + spec.nbytes]
+            leaves[spec.key] = chunk.view(_np_dtype(spec.dtype)).reshape(
+                spec.shape).copy()
+        return _unflatten(leaves)
+
+    def release(self, i: int) -> None:
+        """Drop layer i's page-cache mapping behind the compute front."""
+        mm = self._maps.get(i)
+        if mm is None:
+            return
+        try:
+            if hasattr(mmap, "MADV_DONTNEED"):
+                mm.madvise(mmap.MADV_DONTNEED)
+                self.released += 1
+        except (OSError, ValueError):  # pragma: no cover - platform quirks
+            pass
+
+    def willneed(self, i: int) -> None:
+        """Hint the kernel to start reading layer i (prefetch side)."""
+        try:
+            if hasattr(mmap, "MADV_WILLNEED"):
+                self._map(i).madvise(mmap.MADV_WILLNEED)
+        except (OSError, ValueError):  # pragma: no cover
+            pass
+
+    def close(self) -> None:
+        for mm in self._maps.values():
+            try:
+                mm.close()
+            except BufferError:     # a caller still holds a layer() view
+                pass
+        for f in self._files.values():
+            f.close()
+        self._maps.clear()
+        self._files.clear()
+
+    def __enter__(self) -> "ParamStore":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def load_resident(store: ParamStore) -> Params:
+    """Materialize a full stacked pytree from a store (test utility — the
+    inverse of ``save_param_store`` up to leaf copies)."""
+    layers = [store.layer(i) for i in range(store.n_layers)]
+    blocks = jax.tree.map(lambda *xs: np.stack([np.asarray(x) for x in xs]),
+                          *layers)
+    out = dict(store.head())
+    out["blocks"] = blocks
+    return out

@@ -198,6 +198,22 @@ def pad_vocab(params: Params, cfg: ModelConfig, tp: int) -> Params:
     return out
 
 
+def _stacked_leaf_spec(key: str, nd: int, *, ep: bool = False):
+    """Spec for one stacked per-layer leaf: axis 0 = ring layer order ->
+    "data"; FFN/MoE inner dims over "model"; everything else replicated."""
+    if key in ("w_gate", "w_up") and nd == 4:          # MoE (L, E, d, f)
+        return P("data", "model", None, None) if ep \
+            else P("data", None, None, "model")
+    if key == "w_down" and nd == 4:
+        return P("data", "model", None, None) if ep \
+            else P("data", None, "model", None)
+    if key in ("w_gate", "w_up") and nd == 3:          # GLU (L, d, f)
+        return P("data", None, "model")
+    if key == "w_down" and nd == 3:
+        return P("data", "model", None)
+    return P(*(["data"] + [None] * (nd - 1)))
+
+
 def ring_param_specs(cfg: ModelConfig, mesh: Mesh, params: Params):
     """PartitionSpecs for ring-mode params.
 
@@ -218,19 +234,7 @@ def ring_param_specs(cfg: ModelConfig, mesh: Mesh, params: Params):
             return P(None, "model")
         if key == "final_norm":
             return P()
-        # stacked per-layer leaves: axis 0 = ring layer order -> "data"
-        if key in ("w_gate", "w_up") and nd == 4:      # MoE (L, E, d, f)
-            return P("data", "model", None, None) if ep \
-                else P("data", None, None, "model")
-        if key == "w_down" and nd == 4:
-            return P("data", "model", None, None) if ep \
-                else P("data", None, "model", None)
-        if key in ("w_gate", "w_up") and nd == 3:      # GLU (L, d, f)
-            return P("data", None, "model")
-        if key == "w_down" and nd == 3:
-            return P("data", "model", None)
-        # everything else stacked: replicated over model
-        return P(*(["data"] + [None] * (nd - 1)))
+        return _stacked_leaf_spec(key, nd, ep=ep)
 
     flat, treedef = jax.tree_util.tree_flatten_with_path(params)
     return jax.tree_util.tree_unflatten(
@@ -601,6 +605,163 @@ def build_ring_serve_step(cfg: ModelConfig, mesh: Mesh, plan: RingPlan,
         return jax.jit(fn, donate_argnums=(3,))
 
     return make
+
+
+# --------------------------------------------------------------------------- #
+#  streamed piped ring: host-driven microsteps over disk-backed banks
+# --------------------------------------------------------------------------- #
+#
+# ``build_ring_serve_step`` runs the whole k*M + M - 1 microstep schedule
+# inside one jit over the full resident layer bank. The streamed variant
+# exposes ONE microstep as the jitted unit: the host loop feeds each step
+# the (w, ...) window bank it needs (assembled from the layer-sharded
+# store by ``streaming.RingBankPrefetcher``), so per-device weight
+# residency is bounded by the window size — the paper's pipelined layer
+# streaming on the SPMD ring. The KV cache stays device-resident.
+
+def ring_bank_rounds(plan: RingPlan, t: int) -> np.ndarray:
+    """(M,) round index r_m(t) stage m computes at microstep t (clipped —
+    out-of-schedule stages are masked inside the step anyway)."""
+    M_stages, k = plan.n_stages, plan.k
+    out = np.zeros(M_stages, dtype=np.int64)
+    for m in range(M_stages):
+        e = (t - m) % M_stages
+        j = t - e
+        out[m] = min(max(j // M_stages, 0), k - 1)
+    return out
+
+
+def ring_bank_layers(plan: RingPlan, t: int) -> np.ndarray:
+    """(M*w,) global layer index for each row of the step-t window bank.
+
+    Bank row m*w + off is ring-stacked position m*k*w + r_m(t)*w + off,
+    i.e. global layer (r_m(t)*M + m)*w + off (rows >= L are zero padding).
+    """
+    M_stages, k, w = plan.n_stages, plan.k, plan.w
+    rs = ring_bank_rounds(plan, t)
+    rows = np.zeros(M_stages * w, dtype=np.int64)
+    for m in range(M_stages):
+        for off in range(w):
+            rows[m * w + off] = (rs[m] * M_stages + m) * w + off
+    return rows
+
+
+def ring_bank_specs(cfg: ModelConfig, mesh: Mesh, bank_like):
+    """PartitionSpecs for a (M*w, ...) window-bank pytree."""
+    def spec(path, leaf):
+        key = S._leaf_key(jax.tree_util.keystr(path))
+        return S.sanitize(_stacked_leaf_spec(key, leaf.ndim),
+                          tuple(leaf.shape), mesh)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(bank_like)
+    return jax.tree_util.tree_unflatten(treedef,
+                                        [spec(p, l) for p, l in flat])
+
+
+def build_ring_stream_step(cfg: ModelConfig, mesh: Mesh, plan: RingPlan,
+                           head_params: Params, cache_like, layer_like, *,
+                           n_tokens: int = 1):
+    """Build the jitted pieces of the streamed ring pass.
+
+    Returns ``((embed_fn, micro_fn, final_fn), bank_specs)``:
+
+      embed_fn(tokens, head)                  -> emb_all (B, T, d)
+      micro_fn(t, x, emb_all, ln, layers_c, out_buf, bank, final_norm)
+                                              -> (x, layers_c, out_buf)
+      final_fn(out_buf, head)                 -> logits (B, T, V_pad)
+
+    ``bank`` holds each stage's current (w, ...) window
+    (``ring_bank_layers`` rows, assembled host-side per microstep);
+    ``head_params``/``cache_like`` must be ring-prepared (``pad_vocab``,
+    cache via ``pad_and_permute``). Single-pod meshes only — the streamed
+    driver is host-paced and pods would need one driver per replica.
+    """
+    if "pod" in mesh.axis_names:
+        raise ValueError("streamed ring does not support the pod axis")
+    if n_tokens > 1 and cfg.family == "ssm":
+        raise ValueError("speculative verify needs a rollbackable KV cache")
+    M_stages, k, w = plan.n_stages, plan.k, plan.w
+    kM = k * M_stages
+
+    def embed_local(tokens, head_loc):
+        return _ring_embed(head_loc["embed"], tokens)
+
+    def micro_local(t, x, emb_all, ln, layers_c, out_buf, bank_loc,
+                    final_norm):
+        m = lax.axis_index("data")
+        B = emb_all.shape[0]
+        mb = B // M_stages
+        if cfg.family in ("dense", "moe", "vlm") and not cfg.mla:
+            s_len = layers_c["k"].shape[2]
+        elif cfg.mla:
+            s_len = layers_c["latent"].shape[2]
+        else:
+            s_len = 0
+        s_start = lax.axis_index("model") * s_len
+
+        e = jnp.mod(t - m, M_stages)
+        j = t - e
+        valid = (j >= 0) & (j < kM)
+        r = jnp.clip(j // M_stages, 0, k - 1)
+
+        c_r = jax.tree.map(
+            lambda a: lax.dynamic_slice_in_dim(
+                lax.dynamic_slice_in_dim(a, r * w, w, axis=0),
+                e * mb, mb, axis=1),
+            layers_c)
+        ln_mb = lax.dynamic_slice(ln, (e * mb,), (mb,))
+        emb_mb = lax.dynamic_slice_in_dim(emb_all, e * mb, mb, axis=0)
+
+        x_in = jnp.where(jnp.equal(j, 0), emb_mb, x)
+        x_out, c_new = run_ring_window(cfg, bank_loc, x_in, c_r, ln_mb,
+                                       s_start=s_start, s_len=s_len)
+
+        def wb(full, new, old):
+            sel = jnp.where(valid, new, old)
+            inner = lax.dynamic_update_slice_in_dim(
+                lax.dynamic_slice_in_dim(full, r * w, w, axis=0),
+                sel, e * mb, axis=1)
+            return lax.dynamic_update_slice_in_dim(full, inner, r * w,
+                                                   axis=0)
+
+        layers_c = jax.tree.map(wb, layers_c, c_new, c_r)
+
+        fin = valid & (j == kM - 1)
+        hid = ll.rms_norm(x_out, final_norm, cfg.norm_eps)
+        cur = lax.dynamic_slice_in_dim(out_buf, e * mb, mb, axis=0)
+        out_buf = lax.dynamic_update_slice_in_dim(
+            out_buf, jnp.where(fin, hid, cur), e * mb, axis=0)
+
+        perm = [(i, (i + 1) % M_stages) for i in range(M_stages)]
+        x_next = lax.ppermute(x_out, "data", perm)
+        return x_next, layers_c, out_buf
+
+    def final_local(out_buf, head_loc):
+        hidden = lax.psum(out_buf, "data")
+        return _ring_unembed(head_loc, cfg, hidden)
+
+    hp_specs = ring_param_specs(cfg, mesh, head_params)
+    c_specs = ring_cache_specs(cfg, mesh, cache_like)["layers"]
+    bank_like = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct((M_stages * w,) + tuple(a.shape),
+                                       a.dtype), layer_like)
+    bank_specs = ring_bank_specs(cfg, mesh, bank_like)
+    rep = P(None, None, None)     # (B|mb, T, d) activations
+
+    embed_fn = jax.jit(shard_map(
+        embed_local, mesh=mesh, in_specs=(P(None, None), hp_specs),
+        out_specs=rep, check_vma=False))
+    micro_fn = jax.jit(shard_map(
+        micro_local, mesh=mesh,
+        in_specs=(P(), P("data", None, None), rep, P(None), c_specs,
+                  P("data", None, None), bank_specs, P()),
+        out_specs=(P("data", None, None), c_specs, P("data", None, None)),
+        check_vma=False), donate_argnums=(1, 4, 5))
+    final_fn = jax.jit(shard_map(
+        final_local, mesh=mesh,
+        in_specs=(P("data", None, None), hp_specs),
+        out_specs=P(None, None, "model"), check_vma=False))
+    return (embed_fn, micro_fn, final_fn), bank_specs
 
 
 # --------------------------------------------------------------------------- #

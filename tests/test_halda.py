@@ -129,3 +129,35 @@ def test_gpu_preferred_when_fast():
     sol = halda.solve(devs, mp)
     assert sol.n[0] > 0          # layers land on the fast GPU
     assert sol.w[0] >= sol.w[1]  # and the GPU device carries more
+
+
+def test_speculative_post_pass_reports_candidates():
+    """solve(spec=...) prices every visited assignment with and without
+    speculation; the chosen assignment is flagged and the speculative
+    TPOT beats vanilla when verify amortizes (streamed-heavy cluster)."""
+    devs = [linux_dev("a", 2.0, 80e9, 2.0), linux_dev("b", 2.0, 80e9, 2.0)]
+    mp = small_model(n_layers=12)
+    spec = halda.SpecPostPass(gamma=4, acceptance=0.8,
+                              draft_token_latency=1e-3)
+    sol = halda.solve(devs, mp, spec=spec)
+    assert sol.candidates                       # search trace recorded
+    report = sol.spec_report
+    assert report and len(report) <= spec.top
+    assert any(r["chosen"] for r in report)
+    for r in report:
+        assert r["tpot_vanilla"] > 0 and r["tpot_spec"] > 0
+        assert r["tokens_per_cycle"] > 1.0
+    # vanilla ordering: report sorted by tpot_vanilla
+    vals = [r["tpot_vanilla"] for r in report]
+    assert vals == sorted(vals)
+    # memory-overloaded cluster: weight streaming dominates, so the
+    # gamma+1-token verify amortizes and speculation wins on the winner
+    chosen = next(r for r in report if r["chosen"])
+    assert chosen["tpot_spec"] < chosen["tpot_vanilla"]
+
+
+def test_solve_without_spec_has_no_report():
+    devs = [linux_dev("a", 64.0, 80e9, 2.0), linux_dev("b", 64.0, 80e9, 2.0)]
+    sol = halda.solve(devs, small_model())
+    assert sol.spec_report is None
+    assert sol.candidates

@@ -50,6 +50,57 @@ def test_ring_permutation_bijection(L, M, k):
             assert win[0] == (r * M + m) * w
 
 
+def test_schedule_L_not_divisible_by_window_count():
+    """L % sum(w) != 0 violates Assumption 1 for any window split."""
+    for w in ([3, 2], [4], [1, 1, 1]):
+        L = sum(w) * 2 + 1                     # never divisible
+        with pytest.raises(ValueError):
+            build_schedule(w, [0] * len(w), L)
+
+
+def test_schedule_single_device_ring():
+    """M=1 degenerates to k rounds of one window covering everything."""
+    s = build_schedule([4], [2], 12)
+    validate_schedule(s)
+    assert s.k == 3
+    assert len(s.windows) == 3
+    assert all(win.device == 0 for win in s.windows)
+    assert all(win.n_resident == 2 for win in s.windows)
+    assert s.layer_owner(0).round == 0
+    assert s.layer_owner(11).round == 2
+
+
+def test_schedule_zero_layer_device_skipped():
+    """A device with w_m == 0 (llama.cpp-style baselines) leaves the ring;
+    coverage and ownership must still be exact."""
+    s = build_schedule([0, 3, 3], [0, 1, 0], 12)
+    validate_schedule(s)
+    assert s.k == 2
+    assert s.device_windows(0) == []
+    assert {win.device for win in s.windows} == {1, 2}
+    # every layer resolves to a non-skipped device
+    for layer in range(12):
+        assert s.layer_owner(layer).device in (1, 2)
+    # n_resident is clamped into the window
+    assert all(0 <= win.n_resident <= win.n_layers for win in s.windows)
+
+
+def test_schedule_all_devices_zero_raises():
+    with pytest.raises(ValueError):
+        build_schedule([0, 0], [0, 0], 8)
+
+
+def test_schedule_zero_layer_device_streamed_counts():
+    """n_streamed = w - n_resident feeds the streaming runtime's per-window
+    disk accounting; a fully-resident window streams nothing."""
+    s = build_schedule([2, 2], [2, 0], 8)
+    for win in s.windows:
+        if win.device == 0:
+            assert win.n_streamed == 0
+        else:
+            assert win.n_streamed == win.n_layers
+
+
 def test_padded_layers():
     assert padded_layers(32, 16) == 32
     assert padded_layers(62, 16) == 64
