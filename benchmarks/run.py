@@ -15,7 +15,8 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 SECTIONS = ("table3", "table4", "table6", "fig2", "fig8", "halda",
-            "kernels", "spec_decode", "streaming", "roofline")
+            "kernels", "spec_decode", "streaming", "streaming_q4",
+            "roofline")
 
 
 def _run_section(name: str, fn) -> None:
@@ -58,6 +59,9 @@ def main(argv=None) -> int:
     if "streaming" in wanted:
         from . import streaming
         _run_section("streaming", streaming.main)
+    if "streaming_q4" in wanted:
+        from . import streaming
+        _run_section("streaming_q4", lambda: streaming.main(quant="q4"))
     if "roofline" in wanted:
         from . import roofline
         try:

@@ -46,7 +46,9 @@ def main():
     pr["blocks"] = serve.pad_and_permute(params["blocks"], cfg, stages,
                                          plan.k)
     # int4 weight bank + dequant-in-kernel compute (the §Perf HC2 path)
-    pr = serve.quantize_ring_params(pr, cfg, tp=tp)
+    pr, skipped = serve.quantize_ring_params(pr, cfg, tp=tp)
+    if skipped:
+        print(f"warning: {len(skipped)} leaves left bf16: {skipped}")
     cache["layers"] = serve.pad_and_permute(cache["layers"], cfg, stages,
                                             plan.k)
     step = serve.build_ring_serve_step(cfg, mesh, plan)(pr, cache)

@@ -505,6 +505,27 @@ def streaming_disk_term(dev: DeviceProfile, layer_bytes: float) -> float:
     return layer_bytes / dev.disk_speed()
 
 
+def quantized_layer_bytes(layer_bytes: float, *, bits: int = 4,
+                          group: int = 64, weight_bytes: float = 2.0,
+                          scale_bytes: float = 2.0,
+                          quant_fraction: float = 1.0) -> float:
+    """Reduced per-layer byte count ``b`` after grouped weight quantization
+    — the quantity the disk term prices for a quantized (v2) layer store.
+
+    ``layer_bytes`` is the unquantized store's bytes/layer at
+    ``weight_bytes`` per weight (2.0 = bf16); the quantized fraction of it
+    shrinks to ``bits/8 + scale_bytes/group`` bytes per weight (packed
+    values + one bf16 scale per group, matching ``QuantizedTensor.nbytes``
+    and the paper's Q4K ~4.5 bits/weight accounting), while the rest
+    (norms, biases — ``1 - quant_fraction``) streams at full width. For
+    q4/group-64 over bf16 this is ~0.27x, which is why persisting packed
+    int4 moves the dominant ``layer_bytes / s_disk`` roofline term ~4x.
+    """
+    per_weight = bits / 8.0 + scale_bytes / group
+    quantized = layer_bytes * quant_fraction * per_weight / weight_bytes
+    return quantized + layer_bytes * (1.0 - quant_fraction)
+
+
 def median_event_duration(events: Sequence) -> float:
     """Median duration of a prefetch timeline (single definition, shared
     with ``runtime.streaming.PrefetchStats``). Zero-byte events (ring

@@ -44,6 +44,12 @@ def main(argv=None) -> int:
                          "resident) and, on the ring path, the streamed "
                          "ring driver; reports TPOT and peak resident "
                          "parameter bytes vs the fully-resident run")
+    ap.add_argument("--store-quant", choices=("none", "q4"), default="none",
+                    help="q4: persist the layer store with packed int4 "
+                         "weights + bf16 group scales (v2 manifest) and "
+                         "stream the packed bytes through the prefetch "
+                         "window, dequantizing per layer at use — ~4x "
+                         "fewer streamed bytes/layer than bf16")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -141,16 +147,37 @@ def _stream_smoke(cfg, params, prompts, args, *, ring_ctx=None) -> None:
     import shutil
     import tempfile
 
+    import jax as _jax
+
     from ..models import decode_step_layerwise
     from ..runtime.paramstore import ParamStore, save_param_store
     from ..runtime.streaming import (StreamingParamSource,
                                      StreamingRingDriver)
 
     B, W = prompts.shape[0], args.stream_window
+    tp = ring_ctx[2] if ring_ctx is not None else args.tp
+    store_params = params
+    if args.store_quant == "q4":
+        # TP-aware group picking so ring window banks shard cleanly; the
+        # layer-wise path dequantizes at use either way
+        store_params, skipped = RS.quantize_ring_params(
+            dict(params), cfg, tp=tp)
+        if skipped:
+            print(f"store-quant q4: {len(skipped)} leaves left bf16: "
+                  f"{', '.join(skipped)}")
     sdir = tempfile.mkdtemp(prefix="paramstore_")
     try:
-        save_param_store(params, cfg, sdir)
-        total = ParamStore(sdir).layer_nbytes * cfg.n_layers
+        save_param_store(store_params, cfg, sdir)
+        probe = ParamStore(sdir)
+        total = probe.layer_nbytes * cfg.n_layers
+        if args.store_quant != "none":
+            raw = sum(a.nbytes for a in
+                      _jax.tree.leaves(params["blocks"])) // cfg.n_layers
+            print(f"store: {probe.quant_format} manifest v{probe.version}, "
+                  f"{probe.layer_nbytes / 1e6:.2f} MB/layer packed vs "
+                  f"{raw / 1e6:.2f} MB/layer unquantized "
+                  f"({probe.layer_nbytes / raw:.2f}x)")
+        probe.close()
 
         with StreamingParamSource(ParamStore(sdir), window=W) as src:
             c_s = init_cache(cfg, B, args.ctx, dtype=jnp.float32)
@@ -162,7 +189,9 @@ def _stream_smoke(cfg, params, prompts, args, *, ring_ctx=None) -> None:
                 tok = jnp.argmax(lg[:, 0], -1)[:, None]
             dt = time.time() - t0
             st = src.stats()
-        print(f"streamed decode (window={W}/{cfg.n_layers} layers): "
+        label = "" if args.store_quant == "none" \
+            else f", store={args.store_quant}"
+        print(f"streamed decode (window={W}/{cfg.n_layers} layers{label}): "
               f"{args.new_tokens} tokens × {B} seqs in {dt:.2f}s -> "
               f"{dt / args.new_tokens * 1e3:.1f} ms/token/batch; "
               f"peak resident {st.peak_resident_bytes / 1e6:.1f} MB of "

@@ -40,7 +40,7 @@ def ring_params_shapes(cfg: ModelConfig, n_stages: int, k: int, tp: int,
         p = serve.pad_vocab(p, cfg, tp)
         p["blocks"] = serve.pad_and_permute(p["blocks"], cfg, n_stages, k)
         if quant:
-            p = serve.quantize_ring_params(p, cfg, tp=tp)
+            p, _skipped = serve.quantize_ring_params(p, cfg, tp=tp)
         return p
     return jax.eval_shape(build)
 

@@ -485,6 +485,21 @@ def decode_step(params: Params, cfg: ModelConfig, cache: Dict,
 # (prefetch ahead of the front, release behind it). The math is the exact
 # per-layer sequence the scan performs, so resident and streamed decode
 # agree to numerical tolerance.
+#
+# Quantized stores (v2 manifests persisting packed int4/int2 +
+# group-scale leaves) dequantize here, per layer at use — only the packed
+# bytes ever cross the disk -> staging -> device path, which is the ~4x
+# cut in the dominant ``layer_bytes / s_disk`` roofline term. Matmuls
+# then run on the dequantized weights, so streamed-quantized logits equal
+# the resident-dequantized reference exactly (``kernels.ops.q4_matmul``
+# is the fused in-kernel alternative the ring runtime dispatches to).
+
+def _dequant_params(p: Params) -> Params:
+    """Dequantize any QuantizedTensor leaves pulled from a ParamSource."""
+    from ..quant.grouped import dequantize_tree
+
+    return dequantize_tree(p, jnp.float32)
+
 
 def _layerwise_backbone(source, cfg: ModelConfig, x, positions, cache, *,
                         decode: bool, tp_axis: Optional[str]):
@@ -496,7 +511,7 @@ def _layerwise_backbone(source, cfg: ModelConfig, x, positions, cache, *,
     layers_c = None if cache is None else cache["layers"]
     new_layers = layers_c
     for i in range(cfg.n_layers):
-        p = source.layer(i)
+        p = _dequant_params(source.layer(i))
         c_i = None if layers_c is None else jax.tree.map(
             lambda a: a[i], layers_c)
         if cfg.family == "ssm":
@@ -522,7 +537,7 @@ def forward_layerwise(source, cfg: ModelConfig, tokens: jnp.ndarray, *,
                       positions: Optional[jnp.ndarray] = None,
                       tp_axis: Optional[str] = None) -> jnp.ndarray:
     """``forward`` with weights pulled from a ParamSource."""
-    head = source.head()
+    head = _dequant_params(source.head())
     x = embed_tokens(head, cfg, tokens)
     if embeds is not None:
         x = jnp.concatenate([embeds.astype(x.dtype), x], axis=1)
@@ -543,7 +558,7 @@ def prefill_layerwise(source, cfg: ModelConfig, tokens: jnp.ndarray,
                       tp_axis: Optional[str] = None
                       ) -> Tuple[jnp.ndarray, Dict]:
     """``prefill`` with weights pulled from a ParamSource."""
-    head = source.head()
+    head = _dequant_params(source.head())
     x = embed_tokens(head, cfg, tokens)
     if embeds is not None:
         x = jnp.concatenate([embeds.astype(x.dtype), x], axis=1)
@@ -571,7 +586,7 @@ def decode_step_layerwise(source, cfg: ModelConfig, cache: Dict,
     B, T = tokens.shape
     if T > 1 and cfg.family not in ("dense", "moe", "vlm"):
         raise ValueError(f"multi-token decode unsupported for {cfg.family}")
-    head = source.head()
+    head = _dequant_params(source.head())
     x = embed_tokens(head, cfg, tokens)
     pos = cache["len"][:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]
     if cfg.mrope:

@@ -1,7 +1,9 @@
-from .grouped import (dequantize_q4, dequantize_q2, pack_q4, quantize_q4,
-                      quantize_q2, unpack_q4, QuantizedTensor,
-                      quantize_tree, dequantize_leaf)
+from .grouped import (dequantize_q4, dequantize_q2, pack_q4, pack_q2,
+                      quantize_q4, quantize_q2, unpack_q4, unpack_q2,
+                      QuantizedTensor, quantize_tree, dequantize_leaf,
+                      dequantize_tree)
 
-__all__ = ["dequantize_q4", "dequantize_q2", "pack_q4", "quantize_q4",
-           "quantize_q2", "unpack_q4", "QuantizedTensor", "quantize_tree",
-           "dequantize_leaf"]
+__all__ = ["dequantize_q4", "dequantize_q2", "pack_q4", "pack_q2",
+           "quantize_q4", "quantize_q2", "unpack_q4", "unpack_q2",
+           "QuantizedTensor", "quantize_tree", "dequantize_leaf",
+           "dequantize_tree"]

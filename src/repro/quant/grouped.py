@@ -8,9 +8,11 @@ VMEM (see ``kernels/q4_matmul.py``).
 Formats:
   q4: int4 symmetric, group_size contiguous weights share one f16-ish scale
       (~4.5 bits/weight incl. scale, matching the paper's Q4K accounting).
-  q2: int2 symmetric (IQ1-ish demo, ~2.25 bits/weight).
+  q2: int2 symmetric (IQ1-ish demo, ~2.25 bits/weight incl. scale).
 
-int4 values are packed two-per-int8 for a genuinely 4-bit memory footprint.
+int4 values are packed two-per-int8 and int2 values four-per-int8, so
+``QuantizedTensor.nbytes`` — which the weight-streaming byte accounting
+and the latency model's disk terms consume — is the true footprint.
 """
 from __future__ import annotations
 
@@ -112,20 +114,44 @@ def quantize_q2(w: jnp.ndarray, group: int = DEFAULT_GROUP
                 ) -> QuantizedTensor:
     *lead, K, N = w.shape
     assert K % group == 0
+    assert K % 4 == 0, K                         # 4 values per packed byte
     wg = w.astype(jnp.float32).reshape(*lead, K // group, group, N)
     amax = jnp.max(jnp.abs(wg), axis=-2, keepdims=True)
     scale = jnp.maximum(amax / 1.0, 1e-8)
     q = jnp.clip(jnp.round(wg / scale), -1, 1).astype(jnp.int8)
-    packed = q.reshape(*lead, K, N)              # stored unpacked (demo)
+    packed = pack_q2(q.reshape(*lead, K, N))
     return QuantizedTensor(packed=packed,
                            scale=scale[..., 0, :].astype(jnp.bfloat16),
                            bits=2, group=group, shape=tuple(w.shape))
 
 
+def pack_q2(q: jnp.ndarray) -> jnp.ndarray:
+    """Pack int2 values (as int8 in [-2,1]) four-per-byte along axis -2."""
+    *lead, K, N = q.shape
+    u = q.astype(jnp.uint8) & 0x3
+    out = u[..., 0::4, :]
+    for i in range(1, 4):
+        out = out | (u[..., i::4, :] << (2 * i))
+    return out.astype(jnp.int8)
+
+
+def unpack_q2(packed: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of pack_q2: (…, K/4, N) int8 -> (…, K, N) int8 in [-2,1]."""
+    u = packed.astype(jnp.uint8)
+    vals = []
+    for i in range(4):
+        v = ((u >> (2 * i)) & 0x3).astype(jnp.int8)
+        vals.append(jnp.where(v > 1, v - 4, v))
+    *lead, Kq, N = packed.shape
+    out = jnp.stack(vals, axis=-2)               # (..., Kq, 4, N)
+    return out.reshape(*lead, Kq * 4, N)
+
+
 def dequantize_q2(qt: QuantizedTensor, dtype=jnp.float32) -> jnp.ndarray:
-    *lead, K, N = qt.packed.shape
-    qg = qt.packed.astype(jnp.float32).reshape(*lead, K // qt.group,
-                                               qt.group, N)
+    # dims derived from the packed array (see dequantize_q4 on stale .shape)
+    q = unpack_q2(qt.packed).astype(jnp.float32)
+    *lead, K, N = q.shape
+    qg = q.reshape(*lead, K // qt.group, qt.group, N)
     w = qg * qt.scale[..., :, None, :].astype(jnp.float32)
     return w.reshape(*lead, K, N).astype(dtype)
 
@@ -134,21 +160,31 @@ def dequantize_q2(qt: QuantizedTensor, dtype=jnp.float32) -> jnp.ndarray:
 #  pytree helpers
 # --------------------------------------------------------------------------- #
 
-def _is_weight(path: str, leaf: jnp.ndarray, group: int) -> bool:
-    return (leaf.ndim >= 2 and leaf.shape[-2] % group == 0
+def _is_weight(path: str, leaf: jnp.ndarray, group: int, *,
+               min_ndim: int = 2) -> bool:
+    return (leaf.ndim >= min_ndim and leaf.shape[-2] % group == 0
             and leaf.shape[-1] >= 8 and "norm" not in path.lower())
 
 
 def quantize_tree(params: Dict[str, Any], group: int = DEFAULT_GROUP,
-                  bits: int = 4) -> Dict[str, Any]:
-    """Quantize every eligible matmul weight in a parameter pytree."""
+                  bits: int = 4, *, stacked: bool = False) -> Dict[str, Any]:
+    """Quantize every eligible matmul weight in a parameter pytree.
+
+    Set ``stacked=True`` for trees whose per-layer leaves carry a leading
+    layer axis (``params["blocks"]`` layouts, the param-store input): it
+    requires ndim >= 3 so a stacked bias/vector leaf ``(L, D)`` can never
+    be mistaken for a weight matrix when L happens to divide the group
+    (axis -2 of such a leaf is the *layer* axis — quantizing along it is
+    silently wrong and breaks the per-layer store sharding).
+    """
     quant = quantize_q4 if bits == 4 else quantize_q2
+    min_ndim = 3 if stacked else 2
     flat = jax.tree_util.tree_flatten_with_path(params)[0]
     treedef = jax.tree_util.tree_structure(params)
     out = []
     for path, leaf in flat:
         name = jax.tree_util.keystr(path)
-        if _is_weight(name, leaf, group):
+        if _is_weight(name, leaf, group, min_ndim=min_ndim):
             out.append(quant(leaf, group))
         else:
             out.append(leaf)
@@ -160,3 +196,14 @@ def dequantize_leaf(leaf, dtype=jnp.float32):
         fn = dequantize_q4 if leaf.bits == 4 else dequantize_q2
         return fn(leaf, dtype)
     return leaf
+
+
+def dequantize_tree(tree: Any, dtype=jnp.float32) -> Any:
+    """Dequantize every QuantizedTensor leaf of a pytree; other leaves
+    pass through untouched. This is the single dequantize-at-use hook the
+    layer-wise model paths and the ring runtime share, so a quantized
+    layer store reproduces the resident-dequantized logits exactly."""
+    return jax.tree.map(
+        lambda leaf: dequantize_leaf(leaf, dtype)
+        if isinstance(leaf, QuantizedTensor) else leaf,
+        tree, is_leaf=lambda x: isinstance(x, QuantizedTensor))

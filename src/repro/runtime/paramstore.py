@@ -20,6 +20,16 @@ the async prefetcher (``runtime.streaming``) copies them into staging
 buffers off-thread. ``ResidentSource`` adapts an in-memory pytree to the
 same ``ParamSource`` interface so every layer-wise consumer can run
 resident or streamed without branching.
+
+Version-2 manifests persist **quantized** leaves: a ``QuantizedTensor``
+(packed int4/int2 values + bf16 group scales, ``quant.grouped``) is
+stored as two flat sub-leaves — ``part: "packed"`` and ``part: "scale"``
+— that share a ``quant: {bits, group, shape}`` record, and ``layer(i)``
+reassembles the ``QuantizedTensor`` from zero-copy mmap views. This is
+the paper's Q4K-weights-on-disk regime: the disk term the latency model
+prices is ``layer_bytes / s_disk``, and packing int4 in the store cuts
+``layer_bytes`` ~4x against bf16 in exactly the window the prefetcher
+streams. Version-1 manifests (unquantized) load unchanged.
 """
 from __future__ import annotations
 
@@ -27,15 +37,18 @@ import dataclasses
 import json
 import mmap
 import os
-from typing import Any, Dict, Iterator, List, Tuple
+from typing import Any, Dict, Iterator, List, Optional, Tuple
 
 import jax
 import numpy as np
+
+from ..quant.grouped import QuantizedTensor
 
 Params = Dict[str, Any]
 
 MANIFEST = "manifest.json"
 HEAD_FILE = "head.bin"
+SUPPORTED_VERSIONS = (1, 2)
 
 #: families whose per-layer stack lives under params["blocks"] with a
 #: leading layer axis — the layout the store shards.
@@ -56,23 +69,37 @@ def _dtype_name(dt) -> str:
 
 @dataclasses.dataclass(frozen=True)
 class LeafSpec:
-    """One leaf inside a flat layer (or head) file."""
+    """One flat sub-leaf inside a layer (or head) file.
+
+    Unquantized leaves are one spec (``part is None``). A quantized leaf
+    is two specs sharing ``key``: ``part == "packed"`` (int4/int2 codes)
+    and ``part == "scale"`` (bf16 group scales), each carrying the same
+    ``quant = {bits, group, shape}`` record (``shape`` is the original
+    unpacked weight shape, layer axis stripped for layer files).
+    """
 
     key: str                 # "/"-joined dict path, e.g. "attn/wq"
     shape: Tuple[int, ...]   # per-layer shape (layer axis stripped)
     dtype: str
     offset: int              # byte offset inside the file
     nbytes: int
+    part: Optional[str] = None       # None | "packed" | "scale"
+    quant: Optional[dict] = None     # {bits, group, shape} (v2 manifests)
 
     @classmethod
     def from_dict(cls, d: dict) -> "LeafSpec":
         return cls(key=d["key"], shape=tuple(d["shape"]), dtype=d["dtype"],
-                   offset=d["offset"], nbytes=d["nbytes"])
+                   offset=d["offset"], nbytes=d["nbytes"],
+                   part=d.get("part"), quant=d.get("quant"))
 
     def to_dict(self) -> dict:
-        return {"key": self.key, "shape": list(self.shape),
-                "dtype": self.dtype, "offset": self.offset,
-                "nbytes": self.nbytes}
+        out = {"key": self.key, "shape": list(self.shape),
+               "dtype": self.dtype, "offset": self.offset,
+               "nbytes": self.nbytes}
+        if self.part is not None:        # v1 manifests stay byte-identical
+            out["part"] = self.part
+            out["quant"] = self.quant
+        return out
 
 
 def _iter_leaves(tree: Params, prefix: str = "") -> Iterator[Tuple[str, Any]]:
@@ -101,6 +128,28 @@ def _layer_file(i: int) -> str:
     return f"layer_{i:05d}.bin"
 
 
+def _flat_parts(tree: Params, *, strip_layer_axis: bool
+                ) -> List[Tuple[str, Optional[str], np.ndarray,
+                                Optional[dict]]]:
+    """Flatten a pytree into (key, part, array, quant) write records.
+
+    A ``QuantizedTensor`` leaf becomes two records (packed values + group
+    scales) sharing a ``quant`` metadata dict; everything else is one
+    plain record. One device->host transfer per leaf, not per layer.
+    """
+    out: List[Tuple[str, Optional[str], np.ndarray, Optional[dict]]] = []
+    for key, leaf in _iter_leaves(tree):
+        if isinstance(leaf, QuantizedTensor):
+            shape = list(leaf.shape[1:] if strip_layer_axis else leaf.shape)
+            q = {"bits": int(leaf.bits), "group": int(leaf.group),
+                 "shape": shape}
+            out.append((key, "packed", np.asarray(leaf.packed), q))
+            out.append((key, "scale", np.asarray(leaf.scale), q))
+        else:
+            out.append((key, None, np.asarray(leaf), None))
+    return out
+
+
 # --------------------------------------------------------------------------- #
 #  save
 # --------------------------------------------------------------------------- #
@@ -110,7 +159,11 @@ def save_param_store(params: Params, cfg, directory: str) -> str:
 
     ``params["blocks"]`` leaves must be layer-stacked (leading L axis) —
     the layout ``models.init_params`` produces for dense/moe/vlm/ssm.
-    Quantized ring banks are not supported (convert before quantizing).
+    Leaves may be ``QuantizedTensor``s (``quant.quantize_tree`` /
+    ``serve.quantize_ring_params`` output): packed values and group
+    scales are persisted as sub-leaves and the manifest bumps to
+    version 2. Ring-permuted banks are not supported (save the
+    global-layer-ordered tree; the ring prefetcher permutes at read).
     """
     if cfg.family not in STACKED_FAMILIES:
         raise ValueError(f"param store unsupported for family {cfg.family}")
@@ -119,40 +172,40 @@ def save_param_store(params: Params, cfg, directory: str) -> str:
 
     layer_specs: List[dict] = []
     offset = 0
-    # one device->host transfer per leaf (not per leaf per layer)
-    flat = [(key, np.asarray(leaf))
-            for key, leaf in _iter_leaves(params["blocks"])]
-    for key, arr in flat:
+    flat = _flat_parts(params["blocks"], strip_layer_axis=True)
+    for key, part, arr, q in flat:
         if arr.shape[0] != L:
             raise ValueError(f"{key}: leading axis {arr.shape[0]} != L={L}")
         per = arr[0]
         layer_specs.append(LeafSpec(
             key=key, shape=tuple(per.shape), dtype=_dtype_name(arr.dtype),
-            offset=offset, nbytes=per.nbytes).to_dict())
+            offset=offset, nbytes=per.nbytes, part=part,
+            quant=q).to_dict())
         offset += per.nbytes
     layer_nbytes = offset
 
     for i in range(L):
         with open(os.path.join(directory, _layer_file(i)), "wb") as f:
-            for key, arr in flat:
+            for key, part, arr, q in flat:
                 f.write(np.ascontiguousarray(arr[i]).tobytes())
 
     head_specs: List[dict] = []
     offset = 0
     head_tree = {k: v for k, v in params.items() if k != "blocks"}
-    head_flat = list(_iter_leaves(head_tree))
     with open(os.path.join(directory, HEAD_FILE), "wb") as f:
-        for key, leaf in head_flat:
-            arr = np.ascontiguousarray(np.asarray(leaf))
+        for key, part, arr, q in _flat_parts(head_tree,
+                                             strip_layer_axis=False):
+            arr = np.ascontiguousarray(arr)
             head_specs.append(LeafSpec(
                 key=key, shape=tuple(arr.shape),
                 dtype=_dtype_name(arr.dtype), offset=offset,
-                nbytes=arr.nbytes).to_dict())
+                nbytes=arr.nbytes, part=part, quant=q).to_dict())
             f.write(arr.tobytes())
             offset += arr.nbytes
 
+    quantized = any(d.get("part") for d in layer_specs + head_specs)
     manifest = {
-        "version": 1,
+        "version": 2 if quantized else 1,
         "model": cfg.name,
         "family": cfg.family,
         "n_layers": L,
@@ -219,17 +272,42 @@ class ParamStore(ParamSource):
 
     def __init__(self, directory: str):
         self.directory = directory
-        with open(os.path.join(directory, MANIFEST)) as f:
-            m = json.load(f)
-        self.manifest = m
-        self.n_layers = int(m["n_layers"])
-        self.layer_nbytes = int(m["layer_nbytes"])
-        self.family = m["family"]
-        self._leaves = [LeafSpec.from_dict(d) for d in m["leaves"]]
-        self._head_leaves = [LeafSpec.from_dict(d) for d in m["head_leaves"]]
+        path = os.path.join(directory, MANIFEST)
+        try:
+            with open(path) as f:
+                m = json.load(f)
+        except json.JSONDecodeError as e:
+            raise ValueError(f"corrupt param-store manifest {path}: {e}") \
+                from e
+        if not isinstance(m, dict):
+            raise ValueError(f"corrupt param-store manifest {path}: "
+                             f"expected an object, got {type(m).__name__}")
+        self.version = int(m.get("version", 1))
+        if self.version not in SUPPORTED_VERSIONS:
+            raise ValueError(
+                f"unsupported param-store manifest version {self.version} "
+                f"(supported: {SUPPORTED_VERSIONS})")
+        try:
+            self.manifest = m
+            self.n_layers = int(m["n_layers"])
+            self.layer_nbytes = int(m["layer_nbytes"])
+            self.family = m["family"]
+            self._leaves = [LeafSpec.from_dict(d) for d in m["leaves"]]
+            self._head_leaves = [LeafSpec.from_dict(d)
+                                 for d in m["head_leaves"]]
+        except KeyError as e:
+            raise ValueError(
+                f"corrupt param-store manifest {path}: missing {e}") from e
         self._maps: Dict[int, mmap.mmap] = {}
         self._files: Dict[int, Any] = {}
         self.released = 0          # release() calls that actually dropped
+
+    @property
+    def quant_format(self) -> Optional[str]:
+        """"q4"/"q2" if any persisted leaf is quantized, else None."""
+        bits = {s.quant["bits"] for s in self._leaves + self._head_leaves
+                if s.quant is not None}
+        return f"q{max(bits)}" if bits else None
 
     # -- mapping lifecycle ------------------------------------------------ #
 
@@ -242,29 +320,56 @@ class ParamStore(ParamSource):
             self._maps[i] = mm
         return mm
 
+    @staticmethod
+    def _read_leaves(specs: List[LeafSpec], buf: np.ndarray, *,
+                     copy: bool = False) -> Params:
+        """Materialize leaves (views into ``buf``) from their specs.
+
+        Quantized sub-leaf pairs reassemble into ``QuantizedTensor``s —
+        packed values and scales both stay zero-copy views unless
+        ``copy`` is set.
+        """
+        leaves: Dict[str, Any] = {}
+        pending: Dict[str, dict] = {}
+        for spec in specs:
+            raw = buf[spec.offset:spec.offset + spec.nbytes]
+            arr = raw.view(_np_dtype(spec.dtype)).reshape(spec.shape)
+            if copy:
+                arr = arr.copy()
+            if spec.part is None:
+                leaves[spec.key] = arr
+            else:
+                ent = pending.setdefault(spec.key,
+                                         dict(spec.quant or {}))
+                ent[spec.part] = arr
+        for key, ent in pending.items():
+            if "packed" not in ent or "scale" not in ent:
+                raise ValueError(
+                    f"quantized leaf {key}: manifest is missing its "
+                    f"{'scale' if 'packed' in ent else 'packed'} sub-leaf")
+            if not {"bits", "group", "shape"} <= ent.keys():
+                raise ValueError(
+                    f"quantized leaf {key}: manifest quant record is "
+                    f"missing {sorted({'bits', 'group', 'shape'} - ent.keys())}")
+            leaves[key] = QuantizedTensor(
+                packed=ent["packed"], scale=ent["scale"],
+                bits=int(ent["bits"]), group=int(ent["group"]),
+                shape=tuple(ent["shape"]))
+        return _unflatten(leaves)
+
     def layer(self, i: int) -> Params:
         if not 0 <= i < self.n_layers:
             raise IndexError(i)
         mm = self._map(i)
         buf = np.frombuffer(mm, dtype=np.uint8, count=self.layer_nbytes)
-        leaves = {}
-        for spec in self._leaves:
-            raw = buf[spec.offset:spec.offset + spec.nbytes]
-            leaves[spec.key] = raw.view(_np_dtype(spec.dtype)).reshape(
-                spec.shape)
-        return _unflatten(leaves)
+        return self._read_leaves(self._leaves, buf)
 
     def head(self) -> Params:
         path = os.path.join(self.directory, HEAD_FILE)
-        leaves = {}
         with open(path, "rb") as f:
             raw = f.read()
         buf = np.frombuffer(raw, dtype=np.uint8)
-        for spec in self._head_leaves:
-            chunk = buf[spec.offset:spec.offset + spec.nbytes]
-            leaves[spec.key] = chunk.view(_np_dtype(spec.dtype)).reshape(
-                spec.shape).copy()
-        return _unflatten(leaves)
+        return self._read_leaves(self._head_leaves, buf, copy=True)
 
     def release(self, i: int) -> None:
         """Drop layer i's page-cache mapping behind the compute front."""
@@ -279,12 +384,20 @@ class ParamStore(ParamSource):
             pass
 
     def willneed(self, i: int) -> None:
-        """Hint the kernel to start reading layer i (prefetch side)."""
-        try:
-            if hasattr(mmap, "MADV_WILLNEED"):
-                self._map(i).madvise(mmap.MADV_WILLNEED)
-        except (OSError, ValueError):  # pragma: no cover
-            pass
+        """Hint the kernel to start reading layer i (prefetch side).
+
+        Bounds-checked like ``layer()``, and ``_map()`` failures (a
+        missing/unreadable ``layer_*.bin`` is store corruption) propagate
+        — only the madvise call itself, a pure hint, is best-effort.
+        """
+        if not 0 <= i < self.n_layers:
+            raise IndexError(i)
+        mm = self._map(i)
+        if hasattr(mmap, "MADV_WILLNEED"):
+            try:
+                mm.madvise(mmap.MADV_WILLNEED)
+            except (OSError, ValueError):  # pragma: no cover - hint only
+                pass
 
     def close(self) -> None:
         for mm in self._maps.values():

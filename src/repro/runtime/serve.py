@@ -34,7 +34,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -130,8 +130,13 @@ _RING_TP_CONTRACTION = frozenset({"w_down", "out_proj"})
 
 
 def quantize_ring_params(params: Params, cfg: ModelConfig, *,
-                         tp: int = 16) -> Params:
+                         tp: int = 16) -> Tuple[Params, List[str]]:
     """Store the ring layer bank in packed int4 (+bf16 group scales).
+
+    Returns ``(params, skipped)`` where ``skipped`` lists the eligible
+    matmul leaves left in bf16 because no group size satisfied the
+    sharding divisibility constraints — a silent bf16 fallback would cap
+    compression without anyone noticing, so benches must report it.
 
     The TPU-side compute pairs this with the dequant-in-kernel
     ``kernels/q4_matmul`` (validated vs its oracle); the jnp path
@@ -145,6 +150,8 @@ def quantize_ring_params(params: Params, cfg: ModelConfig, *,
     """
     from ..quant.grouped import quantize_q4
 
+    skipped: List[str] = []
+
     def pick_group(key: str, K: int) -> Optional[int]:
         for g in (64, 32, 16):
             if K % g:
@@ -156,33 +163,38 @@ def quantize_ring_params(params: Params, cfg: ModelConfig, *,
             return g
         return None
 
-    def walk(tree):
+    def walk(tree, prefix=""):
         if isinstance(tree, dict):
             out = {}
             for k, v in tree.items():
-                g = (pick_group(k, v.shape[-2])
-                     if (k in RING_QUANT_KEYS and hasattr(v, "ndim")
-                         and v.ndim >= 3) else None)
+                eligible = (k in RING_QUANT_KEYS and hasattr(v, "ndim")
+                            and v.ndim >= 3)
+                g = pick_group(k, v.shape[-2]) if eligible else None
                 if g:
                     out[k] = quantize_q4(v, group=g)
                 else:
-                    out[k] = walk(v)
+                    if eligible:
+                        skipped.append(f"{prefix}{k} (K={v.shape[-2]})")
+                    out[k] = walk(v, f"{prefix}{k}/")
             return out
         return tree
 
     out = dict(params)
     out["blocks"] = walk(params["blocks"])
-    return out
+    if skipped:
+        import logging
+
+        logging.getLogger(__name__).warning(
+            "quantize_ring_params: %d leaves left bf16 (no group size "
+            "fits K and tp=%d): %s", len(skipped), tp, ", ".join(skipped))
+    return out, skipped
 
 
 def _dequant_tree(p):
     """Dequantize any QuantizedTensor leaves of a (sliced) param subtree."""
-    from ..quant.grouped import QuantizedTensor, dequantize_leaf
+    from ..quant.grouped import dequantize_tree
 
-    return jax.tree.map(
-        lambda leaf: dequantize_leaf(leaf, jnp.bfloat16)
-        if isinstance(leaf, QuantizedTensor) else leaf,
-        p, is_leaf=lambda x: isinstance(x, QuantizedTensor))
+    return dequantize_tree(p, jnp.bfloat16)
 
 
 def pad_vocab(params: Params, cfg: ModelConfig, tp: int) -> Params:

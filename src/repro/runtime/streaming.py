@@ -30,6 +30,13 @@ Three consumers:
   * the prefetch timeline (``PrefetchEvent``) feeds
     ``core.latency.streaming_crosscheck`` so the analytic disk terms are
     validated against measured reads.
+
+Quantized (v2) stores flow through unchanged: ``store.layer(i)`` hands
+back ``QuantizedTensor`` leaves whose packed/scale children are what the
+staging copies, byte accounting and ``device_put`` traverse — so the
+prefetch window, the resident-bytes bound and ``PrefetchStats`` all see
+the ~4x-smaller packed footprint, and dequantization happens at use
+(layer-wise model paths / ``serve.run_ring_window``), never in staging.
 """
 from __future__ import annotations
 
@@ -76,6 +83,16 @@ class PrefetchStats:
     stall_s: float                    # compute blocked waiting on a layer
     layers_served: int
     releases: int
+
+    @property
+    def bytes_per_layer(self) -> float:
+        """Measured streamed bytes per staged layer. For a quantized (v2)
+        store this is the *packed* footprint — staging copies exactly the
+        packed int4/int2 + scale sub-leaves, so it lands ~4x under the
+        bf16 store's ``layer_nbytes`` (the benchmark's acceptance gate
+        reads this, not manifest math)."""
+        reads = [e for e in self.events if e.nbytes > 0]
+        return (sum(e.nbytes for e in reads) / len(reads)) if reads else 0.0
 
     @property
     def median_layer_read_s(self) -> float:

@@ -9,9 +9,9 @@ except ImportError:                      # container lacks hypothesis
     from conftest import hypothesis_fallback as _hf
     given, settings, st = _hf.given, _hf.settings, _hf.st
 
-from repro.quant import (dequantize_q2, dequantize_q4, pack_q4, quantize_q2,
-                         quantize_q4, quantize_tree, unpack_q4,
-                         dequantize_leaf, QuantizedTensor)
+from repro.quant import (dequantize_q2, dequantize_q4, pack_q2, pack_q4,
+                         quantize_q2, quantize_q4, quantize_tree, unpack_q2,
+                         unpack_q4, dequantize_leaf, QuantizedTensor)
 
 KEY = jax.random.PRNGKey(0)
 
@@ -42,6 +42,26 @@ def test_q4_memory_footprint():
     qt = quantize_q4(w, group=64)
     # 4 bits + bf16 scale per 64 weights = 4.25 bits -> ratio vs f32
     assert qt.nbytes / (w.size * 4) < 0.14
+
+
+def test_pack_q2_roundtrip():
+    q = jnp.asarray(np.random.default_rng(1).integers(-1, 2, (128, 32)),
+                    jnp.int8)
+    assert (unpack_q2(pack_q2(q)) == q).all()
+
+
+def test_q2_memory_footprint():
+    """q2 packs 4 values/byte: ~2.25 bits/weight incl. the bf16 group
+    scale — the footprint the streaming byte accounting and the latency
+    model's disk term consume, so one-value-per-int8 storage (a 4x
+    overstatement of compression) must never come back."""
+    w = jax.random.normal(KEY, (512, 256))
+    qt = quantize_q2(w, group=64)
+    assert qt.packed.shape == (512 // 4, 256)
+    # 2 bits + bf16 scale per 64 weights = 2.25 bits -> ratio vs f32
+    assert qt.nbytes / (w.size * 4) < 0.09
+    # and q2 must now beat q4's footprint, not quadruple it
+    assert qt.nbytes < quantize_q4(w, group=64).nbytes
 
 
 def test_q2_error_bound():

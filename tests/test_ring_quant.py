@@ -26,7 +26,8 @@ def test_ring_q4_matches_dequantized_reference(arch):
     toks = jax.random.randint(key, (B, 4), 0, cfg.vocab)
 
     # reference: plain decode with dequantized weights
-    pq = serve.quantize_ring_params(dict(params), cfg, tp=2)
+    pq, skipped = serve.quantize_ring_params(dict(params), cfg, tp=2)
+    assert skipped == []
     pd = dict(pq)
     pd["blocks"] = jax.tree.map(lambda a: a.astype(jnp.float32),
                                 serve._dequant_tree(pq["blocks"]))
@@ -39,7 +40,7 @@ def test_ring_q4_matches_dequantized_reference(arch):
     plan = serve.RingPlan.make(cfg, 4, k=2)
     pr = serve.pad_vocab(dict(params), cfg, 2)
     pr["blocks"] = serve.pad_and_permute(params["blocks"], cfg, 4, 2)
-    pr = serve.quantize_ring_params(pr, cfg, tp=2)
+    pr, _ = serve.quantize_ring_params(pr, cfg, tp=2)
     cache = init_cache(cfg, B, Smax, dtype=jnp.float32)
     cache["layers"] = serve.pad_and_permute(cache["layers"], cfg, 4, 2)
     step = serve.build_ring_serve_step(cfg, mesh, plan)(pr, cache)
@@ -55,7 +56,8 @@ def test_ring_q4_matches_dequantized_reference(arch):
 def test_quantize_ring_params_selective():
     cfg = get_config("qwen2.5-14b").reduced()
     params = init_params(cfg, jax.random.PRNGKey(0))
-    pq = serve.quantize_ring_params(params, cfg, tp=2)
+    pq, skipped = serve.quantize_ring_params(params, cfg, tp=2)
+    assert skipped == []
     from repro.quant.grouped import QuantizedTensor
     flat = jax.tree_util.tree_flatten_with_path(
         pq["blocks"], is_leaf=lambda x: isinstance(x, QuantizedTensor))[0]
@@ -65,3 +67,19 @@ def test_quantize_ring_params_selective():
         kinds[name.split("'")[-2]] = isinstance(leaf, QuantizedTensor)
     assert kinds["wq"] and kinds["w_down"]
     assert not kinds["attn_norm"] and not kinds["bq"]
+
+
+def test_quantize_ring_params_reports_skipped():
+    """A leaf no group size fits must be surfaced, not silently left bf16
+    (a hidden compression cap would skew the streamed-bytes accounting)."""
+    import numpy as np
+    from repro.quant.grouped import QuantizedTensor
+
+    cfg = get_config("qwen2.5-14b").reduced()
+    blocks = {"wq": jnp.asarray(np.zeros((4, 64, 64), np.float32)),
+              # K=50: not divisible by 64/32/16 -> unquantizable
+              "wo": jnp.asarray(np.zeros((4, 50, 64), np.float32))}
+    pq, skipped = serve.quantize_ring_params({"blocks": blocks}, cfg, tp=2)
+    assert isinstance(pq["blocks"]["wq"], QuantizedTensor)
+    assert not isinstance(pq["blocks"]["wo"], QuantizedTensor)
+    assert skipped == ["wo (K=50)"]
