@@ -16,7 +16,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 SECTIONS = ("table3", "table4", "table6", "fig2", "fig8", "halda",
             "kernels", "spec_decode", "streaming", "streaming_q4",
-            "roofline")
+            "paged_kv", "roofline")
 
 
 def _run_section(name: str, fn) -> None:
@@ -62,6 +62,9 @@ def main(argv=None) -> int:
     if "streaming_q4" in wanted:
         from . import streaming
         _run_section("streaming_q4", lambda: streaming.main(quant="q4"))
+    if "paged_kv" in wanted:
+        from . import paged_kv
+        _run_section("paged_kv", paged_kv.main)
     if "roofline" in wanted:
         from . import roofline
         try:

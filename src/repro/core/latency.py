@@ -526,6 +526,85 @@ def quantized_layer_bytes(layer_bytes: float, *, bits: int = 4,
     return quantized + layer_bytes * (1.0 - quant_fraction)
 
 
+# ---------------------------------------------------------------------------
+# Paged KV-cache byte terms (runtime.kvcache)
+# ---------------------------------------------------------------------------
+#
+# The dense cache's footprint is an envelope — batch * max_len — while the
+# paged cache's tracks *live* tokens plus one partially-filled page per
+# sequence. These terms price both so the scheduler (and the benchmark
+# gates) can reason about KV growth and cold-page offload traffic the
+# same way the streaming terms price weight movement.
+
+def kv_bytes_per_token(model: ModelProfile) -> float:
+    """KV bytes one decoded token adds across the whole stack — the paged
+    cache's unit of allocation pressure (page_bytes = this * page_tokens).
+    """
+    return model.kv_bytes_per_token_layer * model.n_layers
+
+
+def dense_kv_bytes(model: ModelProfile, batch: int, max_len: int) -> float:
+    """Footprint of the dense (L, B, max_len, ...) preallocation."""
+    return kv_bytes_per_token(model) * batch * max_len
+
+
+def paged_kv_highwater(model: ModelProfile, active_tokens: int,
+                       batch: int, page_tokens: int) -> float:
+    """Upper bound on paged-cache HBM at ``active_tokens`` live tokens:
+    every live token is paged, plus at most one partially-filled page per
+    sequence (internal fragmentation is bounded by the page size)."""
+    pages = -(-active_tokens // max(page_tokens, 1)) + batch
+    return pages * kv_bytes_per_token(model) * page_tokens
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedKVEstimate:
+    """Analytic view of a paged-KV configuration (benchmark cross-checks)."""
+
+    bytes_per_token: float       # per-token KV growth, whole stack
+    page_bytes: float
+    highwater_bytes: float       # paged bound at the active token count
+    dense_bytes: float           # the batch * max_len envelope
+    fetch_s_per_page: float      # host->device cold-page fetch term
+
+    @property
+    def savings(self) -> float:
+        return self.dense_bytes / max(self.highwater_bytes, 1e-12)
+
+
+def paged_kv_estimate(model: ModelProfile, *, active_tokens: int,
+                      batch: int, max_len: int, page_tokens: int,
+                      dev: Optional[DeviceProfile] = None
+                      ) -> PagedKVEstimate:
+    """Price a paged-KV configuration: per-token growth, high-water bound
+    vs the dense envelope, and the cold-page fetch term (host offload
+    moves page_bytes over the host memory bus, the analogue of the
+    ``layer_bytes / s_disk`` weight-streaming term)."""
+    bpt = kv_bytes_per_token(model)
+    page_bytes = bpt * page_tokens
+    bw = dev.cpu_membw if dev is not None else 10e9
+    return PagedKVEstimate(
+        bytes_per_token=bpt, page_bytes=page_bytes,
+        highwater_bytes=paged_kv_highwater(model, active_tokens, batch,
+                                           page_tokens),
+        dense_bytes=dense_kv_bytes(model, batch, max_len),
+        fetch_s_per_page=page_bytes / max(bw, 1.0))
+
+
+def kv_offload_crosscheck(page_bytes: float, bw: float,
+                          events: Sequence) -> StreamingCheck:
+    """Cross-check the cold-page fetch term against the offloader's
+    measured staging timeline (``runtime.kvcache.BlockOffloader.events``)
+    — same closed loop as ``streaming_crosscheck``, with the host memory
+    bus in place of the disk."""
+    predicted = page_bytes / max(bw, 1.0)
+    measured = median_event_duration(events)
+    return StreamingCheck(
+        predicted_layer_s=predicted, measured_layer_s=measured,
+        measured_bps=aggregate_bps(events), modeled_bps=bw,
+        ratio=measured / max(predicted, 1e-12))
+
+
 def median_event_duration(events: Sequence) -> float:
     """Median duration of a prefetch timeline (single definition, shared
     with ``runtime.streaming.PrefetchStats``). Zero-byte events (ring

@@ -14,6 +14,8 @@ import jax.numpy as jnp
 from . import ref
 from .flash_decode import flash_decode as _flash_decode_kernel
 from .flash_decode import flash_verify as _flash_verify_kernel
+from .paged_decode import paged_decode as _paged_decode_kernel
+from .paged_decode import paged_verify as _paged_verify_kernel
 from .q4_matmul import q4_matmul as _q4_matmul_kernel
 from .ssd_scan import ssd_scan as _ssd_scan_kernel
 
@@ -48,6 +50,24 @@ def flash_verify(q, k, v, kv_len, *, window: Optional[int] = None):
         return ref.flash_verify_ref(q, k, v, kv_len, window=window)
     return _flash_verify_kernel(q, k, v, kv_len, window=window,
                                 interpret=_interpret())
+
+
+def paged_decode(q, k_pages, v_pages, table, kv_len, *,
+                 window: Optional[int] = None):
+    if _FORCE_REF:
+        return ref.paged_decode_ref(q, k_pages, v_pages, table, kv_len,
+                                    window=window)
+    return _paged_decode_kernel(q, k_pages, v_pages, table, kv_len,
+                                window=window, interpret=_interpret())
+
+
+def paged_verify(q, k_pages, v_pages, table, kv_len, *,
+                 window: Optional[int] = None):
+    if _FORCE_REF:
+        return ref.paged_verify_ref(q, k_pages, v_pages, table, kv_len,
+                                    window=window)
+    return _paged_verify_kernel(q, k_pages, v_pages, table, kv_len,
+                                window=window, interpret=_interpret())
 
 
 def ssd_scan(x, dt, A, Bmat, Cmat, *, chunk: int = 128):

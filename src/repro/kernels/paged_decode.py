@@ -1,0 +1,154 @@
+"""Pallas TPU kernel: paged decode/verify attention (block-table gather).
+
+The paged KV cache (``runtime.kvcache``) stores K/V in a global pool of
+fixed-size token pages; each sequence addresses its pages through a
+per-slot block table. This kernel is ``flash_decode.flash_verify`` with
+the KV-chunk axis routed through that table: grid position ``j`` is the
+*logical* page of the sequence (covering absolute positions
+``j*bs .. (j+1)*bs - 1``) and the BlockSpec index map reads the
+scalar-prefetched table to fetch the *physical* page — the gather costs
+no extra HBM traffic, pages stream into VMEM exactly like contiguous
+chunks would.
+
+Both the block table and ``kv_len`` arrive via scalar prefetch
+(``PrefetchScalarGridSpec``): index maps need the table before the body
+runs, and masking needs real lengths. Everything else — the online
+softmax across the sequential page axis, the (draft position, GQA rep)
+row flattening, the causal mask among draft tokens — is unchanged from
+the contiguous kernel.
+
+Block working set (bs=page_tokens rounded to >= 8 sublanes, T=8, n_rep=8,
+D=128) matches the contiguous kernel's at block_s = bs.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _paged_verify_kernel(kv_len_ref, table_ref, q_ref, k_ref, v_ref,
+                         out_ref, acc_ref, m_ref, l_ref, *, block_s: int,
+                         window: Optional[int], n_chunks: int, n_draft: int,
+                         n_rep: int):
+    """Identical math to ``flash_decode._verify_kernel``; the page index
+    ``s_idx`` is logical — physical routing happened in the index maps."""
+    b = pl.program_id(0)
+    s_idx = pl.program_id(2)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    rows = n_draft * n_rep
+    q = q_ref[0, 0]                                  # (rows, D)
+    k = k_ref[0, 0]                                  # (bs, D)
+    v = v_ref[0, 0]
+    kv_len = kv_len_ref[b]
+
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    s = jnp.dot(q.astype(jnp.float32) * scale, k.astype(jnp.float32).T,
+                preferred_element_type=jnp.float32)  # (rows, bs)
+
+    pos = s_idx * block_s + jax.lax.broadcasted_iota(jnp.int32,
+                                                     (1, block_s), 1)
+    t_row = jax.lax.broadcasted_iota(jnp.int32, (rows, 1), 0) // n_rep
+    qpos = kv_len - n_draft + t_row                  # (rows, 1)
+    mask = pos <= qpos                               # (rows, bs)
+    if window is not None:
+        mask &= pos > (qpos - window)
+    s = jnp.where(mask, s, -jnp.inf)
+
+    m_prev = m_ref[...]                              # (rows, 1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    p = jnp.exp(s - m_safe)
+    p = jnp.where(mask, p, 0.0)
+    corr = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, -1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+        p, v.astype(jnp.float32), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(s_idx == n_chunks - 1)
+    def _done():
+        out_ref[0, 0] = (acc_ref[...]
+                         / jnp.maximum(l_ref[...], 1e-30)
+                         ).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_verify(q: jnp.ndarray, k_pages: jnp.ndarray, v_pages: jnp.ndarray,
+                 table: jnp.ndarray, kv_len: jnp.ndarray, *,
+                 window: Optional[int] = None,
+                 interpret: bool = False) -> jnp.ndarray:
+    """q: (B, T, H, D); k_pages/v_pages: (P, bs, h_kv, D);
+    table: (B, nb) int32 page ids; kv_len: (B,) -> (B, T, H, D).
+
+    Scores T draft positions against a paged KV cache in one pass.
+    ``kv_len`` counts valid positions *including* the T draft tokens the
+    caller already wrote through the table, so T = 1 is ordinary paged
+    decode attention. Table entries past ``ceil(kv_len/bs)`` may be any
+    valid page id (sink/stale) — those positions are masked.
+    """
+    B, T, H, D = q.shape
+    P, bs, h_kv = k_pages.shape[0], k_pages.shape[1], k_pages.shape[2]
+    nb = table.shape[1]
+    n_rep = H // h_kv
+    rows = T * n_rep
+    # (B, h_kv, T*n_rep, D) with row = t * n_rep + rep
+    qg = q.reshape(B, T, h_kv, n_rep, D).transpose(0, 2, 1, 3, 4) \
+        .reshape(B, h_kv, rows, D)
+    kt = k_pages.transpose(0, 2, 1, 3)               # (P, h_kv, bs, D)
+    vt = v_pages.transpose(0, 2, 1, 3)
+
+    grid = (B, h_kv, nb)
+    out = pl.pallas_call(
+        functools.partial(_paged_verify_kernel, block_s=bs, window=window,
+                          n_chunks=nb, n_draft=T, n_rep=n_rep),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,                   # kv_len, block table
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, rows, D),
+                             lambda b, h, j, kv_len, tab: (b, h, 0, 0)),
+                # physical page routed through the prefetched table
+                pl.BlockSpec((1, 1, bs, D),
+                             lambda b, h, j, kv_len, tab:
+                             (tab[b, j], h, 0, 0)),
+                pl.BlockSpec((1, 1, bs, D),
+                             lambda b, h, j, kv_len, tab:
+                             (tab[b, j], h, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, rows, D),
+                                   lambda b, h, j, kv_len, tab:
+                                   (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((rows, D), jnp.float32),
+                pltpu.VMEM((rows, 1), jnp.float32),
+                pltpu.VMEM((rows, 1), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, h_kv, rows, D), q.dtype),
+        interpret=interpret,
+    )(kv_len.astype(jnp.int32), table.astype(jnp.int32), qg, kt, vt)
+    return out.reshape(B, h_kv, T, n_rep, D).transpose(0, 2, 1, 3, 4) \
+        .reshape(B, T, H, D)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_decode(q: jnp.ndarray, k_pages: jnp.ndarray, v_pages: jnp.ndarray,
+                 table: jnp.ndarray, kv_len: jnp.ndarray, *,
+                 window: Optional[int] = None,
+                 interpret: bool = False) -> jnp.ndarray:
+    """q: (B, H, D) -> (B, H, D): the T = 1 slice of ``paged_verify``."""
+    return paged_verify(q[:, None], k_pages, v_pages, table, kv_len,
+                        window=window, interpret=interpret)[:, 0]

@@ -6,7 +6,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from ..models.layers import decode_attention, ssd_chunked, verify_attention
+from ..models.layers import (decode_attention, paged_verify_attention,
+                             ssd_chunked, verify_attention)
 from ..quant.grouped import QuantizedTensor, dequantize_q4
 
 
@@ -35,6 +36,26 @@ def flash_verify_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     """q: (B, T, H, D) -> (B, T, H, D) via the model-layer verify attention
     (causal among the T draft positions; kv_len includes the draft block)."""
     return verify_attention(q, k, v, kv_len, window=window)
+
+
+def paged_verify_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
+                     v_pages: jnp.ndarray, table: jnp.ndarray,
+                     kv_len: jnp.ndarray, *,
+                     window: Optional[int] = None) -> jnp.ndarray:
+    """q: (B, T, H, D); pages (P, bs, h_kv, D); table (B, nb) ->
+    (B, T, H, D) via the model-layer paged attention (gather through the
+    block table, then verify attention; kv_len includes the T tokens)."""
+    return paged_verify_attention(q, k_pages, v_pages, table, kv_len,
+                                  window=window)
+
+
+def paged_decode_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
+                     v_pages: jnp.ndarray, table: jnp.ndarray,
+                     kv_len: jnp.ndarray, *,
+                     window: Optional[int] = None) -> jnp.ndarray:
+    """q: (B, H, D) -> (B, H, D): the T = 1 slice of ``paged_verify_ref``."""
+    return paged_verify_ref(q[:, None], k_pages, v_pages, table, kv_len,
+                            window=window)[:, 0]
 
 
 def ssd_scan_ref(x, dt, A, Bmat, Cmat, *, chunk: int = 128):

@@ -19,6 +19,7 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 from ..configs.base import ModelConfig
@@ -29,6 +30,44 @@ Params = Dict[str, Any]
 # --------------------------------------------------------------------------- #
 #  basics
 # --------------------------------------------------------------------------- #
+
+def qmm(x: jnp.ndarray, w) -> jnp.ndarray:
+    """Matmul against a weight that may still be packed.
+
+    Plain arrays take the ordinary ``@``. A 2-D q4 ``QuantizedTensor``
+    (the shape the streamed layer-wise path pulls from a v2 store)
+    dispatches the fused ``kernels.ops.q4_matmul`` — dequantization
+    happens tile-by-tile in VMEM instead of materializing the bf16 weight
+    in HBM first. Ineligible quantized leaves (q2, 3-D expert stacks,
+    tile-misaligned dims) fall back to dequantize-then-matmul, which is
+    bit-identical at these sizes (both paths accumulate f32).
+    """
+    from ..quant.grouped import QuantizedTensor, dequantize_leaf
+
+    if not isinstance(w, QuantizedTensor):
+        return x @ w
+    *lead, K = x.shape
+    M = int(np.prod(lead, dtype=np.int64)) if lead else 1
+    # the kernel's row tile is min(256, M): M must divide into it
+    if q4_fused_eligible(w) and (M <= 256 or M % 256 == 0):
+        from ..kernels import ops
+
+        out = ops.q4_matmul(x.reshape(M, K), w.packed, w.scale,
+                            group=w.group)
+        return out.reshape(*lead, out.shape[-1]).astype(x.dtype)
+    return x @ dequantize_leaf(w, jnp.float32).astype(x.dtype)
+
+
+def q4_fused_eligible(w) -> bool:
+    """Whether a QuantizedTensor fits ``kernels.q4_matmul``'s layout:
+    2-D q4 packing whose dims divide the kernel's MXU-aligned blocks."""
+    if w.bits != 4 or w.packed.ndim != 2:
+        return False
+    K, N = w.packed.shape[0] * 2, w.packed.shape[1]
+    if K % w.group or 256 % w.group:
+        return False
+    return (K <= 256 or K % 256 == 0) and (N <= 512 or N % 512 == 0)
+
 
 def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5
              ) -> jnp.ndarray:
@@ -334,9 +373,9 @@ def attn_qkv(p: Params, cfg: ModelConfig, x: jnp.ndarray, positions,
              ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     B, S, _ = x.shape
     H, hk, hd = cfg.n_heads, cfg.kv_heads, cfg.head_dim
-    q = x @ p["wq"]
-    k = x @ p["wk"]
-    v = x @ p["wv"]
+    q = qmm(x, p["wq"])
+    k = qmm(x, p["wk"])
+    v = qmm(x, p["wv"])
     if cfg.qkv_bias:
         q = q + p["bq"]
         k = k + p["bk"]
@@ -472,10 +511,144 @@ def attn_block(p: Params, cfg: ModelConfig, x: jnp.ndarray, positions,
             else:
                 new_cache.update(k=kk.astype(cache["k"].dtype),
                                  v=vv.astype(cache["v"].dtype))
-    o = out.reshape(B, S, -1) @ p["wo"]
+    o = qmm(out.reshape(B, S, -1), p["wo"])
     if tp_axis:
         o = lax.psum(o, tp_axis)
     return o, new_cache
+
+
+# --------------------------------------------------------------------------- #
+#  paged KV cache: block-table gather / scatter + paged attention
+# --------------------------------------------------------------------------- #
+
+def gather_pages(pages: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    """(P, bs, ...) page pool + (B, nb) block table -> (B, nb*bs, ...).
+
+    Row ``b``'s gathered axis-1 order IS its sequence order: table entry
+    ``j`` covers absolute positions ``j*bs .. (j+1)*bs - 1``. Entries past
+    a sequence's length may point anywhere valid (the sink page, a stale
+    page) — those positions are >= ``len`` and masked by the caller.
+    """
+    g = jnp.take(pages, table, axis=0)               # (B, nb, bs, ...)
+    B, nb, bs = g.shape[:3]
+    return g.reshape(B, nb * bs, *g.shape[3:])
+
+
+def write_pages(pages: jnp.ndarray, table: jnp.ndarray, ln: jnp.ndarray,
+                vals: jnp.ndarray) -> jnp.ndarray:
+    """Scatter T new cache lines at positions ``ln .. ln+T-1`` through the
+    block table. pages: (P, bs, ...); vals: (B, T, ...); ln: (B,).
+
+    Distinct live slots own distinct pages, so cross-batch scatter indices
+    never collide except on the sink page (freed slots), whose content is
+    never read unmasked.
+    """
+    B, T = vals.shape[:2]
+    bs, nb = pages.shape[1], table.shape[1]
+    bidx = jnp.arange(B)
+    for t in range(T):                       # static, small (draft block)
+        pos = ln + t
+        blk = jnp.minimum(pos // bs, nb - 1)
+        pid = table[bidx, blk]
+        pages = pages.at[pid, pos % bs].set(vals[:, t].astype(pages.dtype))
+    return pages
+
+
+def paged_verify_attention(q: jnp.ndarray, k_pages: jnp.ndarray,
+                           v_pages: jnp.ndarray, table: jnp.ndarray,
+                           kv_len: jnp.ndarray, *,
+                           window: Optional[int] = None) -> jnp.ndarray:
+    """Multi-position attention against a paged cache (pure-jnp oracle for
+    the Pallas ``paged_verify`` kernel).
+
+    q: (B, T, H, D); k_pages/v_pages: (P, bs, h_kv, D); table: (B, nb);
+    kv_len: (B,) valid positions *including* the T current tokens. The
+    gather materializes (B, nb*bs, h_kv, D) sequences whose extra
+    positions are masked exactly like unused dense-cache slots, so paged
+    and dense attention agree bit-for-bit.
+    """
+    k = gather_pages(k_pages, table)
+    v = gather_pages(v_pages, table)
+    return verify_attention(q, k, v, kv_len, window=window)
+
+
+def attn_block_paged(p: Params, cfg: ModelConfig, x: jnp.ndarray, positions,
+                     pages: Dict, table: jnp.ndarray, ln: jnp.ndarray,
+                     *, tp_axis: Optional[str] = None
+                     ) -> Tuple[jnp.ndarray, Dict]:
+    """Decode-mode attention block over one layer's page pool.
+
+    ``pages``: {"k": (P, bs, h_kv, hd), "v": ...}; ``ln``: (B,) valid
+    lengths BEFORE this step. Writes the T new lines through the block
+    table, then attends over the gathered pages — the same per-position
+    math as ``attn_block``'s decode path (T >= 1 verify included), so the
+    paged cache changes where KV lives, never what attention computes.
+    """
+    B, S, _ = x.shape
+    q, k, v = attn_qkv(p, cfg, x, positions)
+    kp = write_pages(pages["k"], table, ln, k)
+    vp = write_pages(pages["v"], table, ln, v)
+    out = paged_verify_attention(q, kp, vp, table, ln + S,
+                                 window=cfg.attn_window)
+    o = qmm(out.reshape(B, S, -1), p["wo"])
+    if tp_axis:
+        o = lax.psum(o, tp_axis)
+    return o, {"k": kp, "v": vp}
+
+
+def mla_block_paged(p: Params, cfg: ModelConfig, x: jnp.ndarray, positions,
+                    pages: Dict, table: jnp.ndarray, ln: jnp.ndarray,
+                    *, tp_axis: Optional[str] = None
+                    ) -> Tuple[jnp.ndarray, Dict]:
+    """MLA decode against paged latent storage (absorbed form).
+
+    ``pages``: {"latent": (P, bs, r_kv + qk_rope_dim)}. Mirrors the
+    absorbed decode branch of ``mla_block`` with the latent gathered
+    through the block table instead of sliced from a dense cache.
+    """
+    B, S, d = x.shape
+    H = cfg.n_heads
+    r_kv = cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    scale = 1.0 / math.sqrt(dn + dr)
+
+    q_lat = rms_norm(x @ p["wq_a"], p["q_norm"], cfg.norm_eps)
+    q = (q_lat @ p["wq_b"]).reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv = x @ p["wkv_a"]
+    latent = rms_norm(kv[..., :r_kv], p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(kv[..., r_kv:][:, :, None, :], positions,
+                        cfg.rope_theta)[:, :, 0]
+    lat_cat = jnp.concatenate([latent, k_rope], -1)
+
+    lp = write_pages(pages["latent"], table, ln, lat_cat)
+    lc = gather_pages(lp, table)                      # (B, S_eff, r + dr)
+    lat_all = lc[..., :r_kv].astype(x.dtype)
+    rope_all = lc[..., r_kv:].astype(x.dtype)
+    S_eff = lc.shape[1]
+    pos_idx = jnp.arange(S_eff)
+    qpos = ln[:, None] + jnp.arange(S)[None, :]       # (B, S)
+    mask = pos_idx[None, None, :] <= qpos[:, :, None]  # (B, S, S_eff)
+
+    wk = p["wk_b"].reshape(r_kv, H, dn)
+    q_abs = jnp.einsum("bshd,rhd->bshr", q_nope, wk)
+    s_nope = jnp.einsum("bqhr,bsr->bhqs", q_abs, lat_all,
+                        preferred_element_type=jnp.float32)
+    s_rope = jnp.einsum("bqhd,bsd->bhqs", q_rope, rope_all,
+                        preferred_element_type=jnp.float32)
+    s_all = (s_nope + s_rope) * scale
+    s_all = jnp.where(mask[:, None], s_all, -jnp.inf)
+    pr = jax.nn.softmax(s_all, axis=-1)
+    o_lat = jnp.einsum("bhqs,bsr->bqhr", pr, lat_all.astype(jnp.float32))
+    wv = p["wv_b"].reshape(r_kv, H, dv)
+    out = jnp.einsum("bqhr,rhv->bqhv", o_lat.astype(x.dtype), wv)
+
+    o = qmm(out.reshape(B, S, H * dv), p["wo"])
+    if tp_axis:
+        o = lax.psum(o, tp_axis)
+    return o, {"latent": lp}
 
 
 def _full_attention(q, k, v):
@@ -615,7 +788,7 @@ def mla_block(p: Params, cfg: ModelConfig, x: jnp.ndarray, positions,
                 lc = jnp.pad(lc, ((0, 0), (0, Smax - lc.shape[1]), (0, 0)))
             new_cache = {"latent": lc.astype(cache["latent"].dtype),
                          "len": cache["len"] + S}
-    o = out.reshape(B, S, H * dv) @ p["wo"]
+    o = qmm(out.reshape(B, S, H * dv), p["wo"])
     if tp_axis:
         o = lax.psum(o, tp_axis)
     return o, new_cache
@@ -639,8 +812,8 @@ def init_glu(cfg: ModelConfig, key, dtype, d_ff: Optional[int] = None
 
 def glu_ffn(p: Params, x: jnp.ndarray, tp_axis: Optional[str] = None
             ) -> jnp.ndarray:
-    h = swish(x @ p["w_gate"]) * (x @ p["w_up"])
-    out = h @ p["w_down"]
+    h = swish(qmm(x, p["w_gate"])) * qmm(x, p["w_up"])
+    out = qmm(h, p["w_down"])
     if tp_axis:
         out = lax.psum(out, tp_axis)
     return out
@@ -915,7 +1088,7 @@ def ssd_block(p: Params, cfg: ModelConfig, x: jnp.ndarray,
     B, S, d = x.shape
     di, N, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_head_dim
     nh = di // P
-    zxbcdt = x @ p["in_proj"]
+    zxbcdt = qmm(x, p["in_proj"])
     z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * N], axis=-1)
     conv_state = cache["conv"] if cache is not None else None
     xbc, new_conv = _causal_conv1d(xbc, p["conv_w"], conv_state)
@@ -942,7 +1115,7 @@ def ssd_block(p: Params, cfg: ModelConfig, x: jnp.ndarray,
     y = y + xh * p["d_skip"][None, None, :, None].astype(x.dtype)
     y = y.reshape(B, S, di)
     y = rms_norm(y * swish(z), p["norm"], cfg.norm_eps)
-    out = y @ p["out_proj"]
+    out = qmm(y, p["out_proj"])
     if tp_axis:
         out = lax.psum(out, tp_axis)
     new_cache = None

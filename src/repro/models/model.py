@@ -487,18 +487,52 @@ def decode_step(params: Params, cfg: ModelConfig, cache: Dict,
 # agree to numerical tolerance.
 #
 # Quantized stores (v2 manifests persisting packed int4/int2 +
-# group-scale leaves) dequantize here, per layer at use — only the packed
-# bytes ever cross the disk -> staging -> device path, which is the ~4x
-# cut in the dominant ``layer_bytes / s_disk`` roofline term. Matmuls
-# then run on the dequantized weights, so streamed-quantized logits equal
-# the resident-dequantized reference exactly (``kernels.ops.q4_matmul``
-# is the fused in-kernel alternative the ring runtime dispatches to).
+# group-scale leaves) keep their matmul weights PACKED here: eligible 2-D
+# q4 leaves flow into ``layers.qmm``, which dispatches the fused
+# ``kernels.ops.q4_matmul`` (dequant-in-kernel, tile-by-tile in VMEM) —
+# only the packed bytes ever cross disk -> staging -> device -> compute.
+# Ineligible leaves (q2, stacked expert tensors, einsum-consumed MLA
+# projections, misaligned dims) dequantize per layer at use; both paths
+# accumulate f32, so streamed-quantized logits equal the
+# resident-dequantized reference.
 
 def _dequant_params(p: Params) -> Params:
     """Dequantize any QuantizedTensor leaves pulled from a ParamSource."""
     from ..quant.grouped import dequantize_tree
 
     return dequantize_tree(p, jnp.float32)
+
+
+#: leaf names whose consumers route through ``layers.qmm`` — the only
+#: sites where a packed weight may survive into the block functions.
+_FUSED_Q4_KEYS = frozenset((
+    "wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down",
+    "in_proj", "out_proj"))
+
+
+def _prepare_layer_params(p: Params) -> Params:
+    """Selective dequantization for the layer-wise (streamed) path.
+
+    Q4 leaves that ``layers.qmm`` can feed to the fused kernel stay
+    packed; everything else dequantizes as before.
+    """
+    from ..quant.grouped import QuantizedTensor, dequantize_leaf
+    from .layers import q4_fused_eligible
+
+    def is_qt(x):
+        return isinstance(x, QuantizedTensor)
+
+    pairs, treedef = jax.tree_util.tree_flatten_with_path(p, is_leaf=is_qt)
+    out = []
+    for path, leaf in pairs:
+        if is_qt(leaf):
+            name = getattr(path[-1], "key", None)
+            if name in _FUSED_Q4_KEYS and q4_fused_eligible(leaf):
+                out.append(leaf)
+                continue
+            leaf = dequantize_leaf(leaf, jnp.float32)
+        out.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, out)
 
 
 def _layerwise_backbone(source, cfg: ModelConfig, x, positions, cache, *,
@@ -511,7 +545,7 @@ def _layerwise_backbone(source, cfg: ModelConfig, x, positions, cache, *,
     layers_c = None if cache is None else cache["layers"]
     new_layers = layers_c
     for i in range(cfg.n_layers):
-        p = _dequant_params(source.layer(i))
+        p = _prepare_layer_params(source.layer(i))
         c_i = None if layers_c is None else jax.tree.map(
             lambda a: a[i], layers_c)
         if cfg.family == "ssm":
@@ -595,6 +629,72 @@ def decode_step_layerwise(source, cfg: ModelConfig, cache: Dict,
                                        decode=True, tp_axis=tp_axis)
     x = ll.rms_norm(x, head["final_norm"], cfg.norm_eps)
     return unembed(head, cfg, x), new_cache
+
+
+# --------------------------------------------------------------------------- #
+#  paged KV-cache paths (block-pool cache, runtime.kvcache)
+# --------------------------------------------------------------------------- #
+#
+# The dense cache above preallocates (L, B, max_len, ...); the paged cache
+# holds a global pool of fixed-size token pages plus a per-slot block
+# table (see runtime/kvcache.py for allocation, prefix sharing and
+# offload). These paths write new cache lines through the table and
+# attend over gathered pages — the per-position math is identical to the
+# dense decode path, so paged greedy decode is byte-identical to dense.
+
+def _paged_backbone(params: Params, cfg: ModelConfig, x, positions, cache,
+                    *, tp_axis: Optional[str]):
+    ln = cache["len"]
+    table = cache["block_table"]
+
+    def body(h, p, pg):
+        h_in = ll.rms_norm(h, p["attn_norm"], cfg.norm_eps)
+        if cfg.mla:
+            a, npg = ll.mla_block_paged(p["attn"], cfg, h_in, positions,
+                                        pg, table, ln, tp_axis=tp_axis)
+        else:
+            a, npg = ll.attn_block_paged(p["attn"], cfg, h_in, positions,
+                                         pg, table, ln, tp_axis=tp_axis)
+        h = h + a
+        g = ll.rms_norm(h, p["ffn_norm"], cfg.norm_eps)
+        if cfg.n_experts:
+            h = h + ll.moe_ffn(p["moe"], cfg, g, lossless=True,
+                               tp_axis=tp_axis)
+        else:
+            h = h + ll.glu_ffn(p["ffn"], g, tp_axis)
+        return h, npg
+
+    x, new_pages = _scan_stack(body, x, params["blocks"], cache["pages"])
+    new_cache = dict(cache)
+    new_cache["pages"] = new_pages
+    new_cache["len"] = ln + x.shape[1]
+    return x, new_cache
+
+
+def decode_step_paged(params: Params, cfg: ModelConfig, cache: Dict,
+                      tokens: jnp.ndarray, *,
+                      tp_axis: Optional[str] = None
+                      ) -> Tuple[jnp.ndarray, Dict]:
+    """``decode_step`` against a paged KV cache. tokens: (B, T).
+
+    cache: {"pages": {leaf: (L, P, bs, ...)}, "block_table": (B, nb),
+    "len": (B,)} as built by ``runtime.kvcache.PagedKVCache``. T > 1 is
+    the speculative verify path; rollback is ``rollback_cache`` on the
+    device side plus ``PagedKVCache.trim_to`` on the allocator (pages
+    past the accepted length return to the pool — the paged analogue of
+    "entries past ``len`` are never attended").
+    """
+    B, T = tokens.shape
+    if cfg.family not in ("dense", "moe", "vlm"):
+        raise ValueError(f"paged decode unsupported for {cfg.family}")
+    x = embed_tokens(params, cfg, tokens)
+    pos = cache["len"][:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]
+    if cfg.mrope:
+        pos = jnp.broadcast_to(pos[None], (3, B, T))
+    x, new_cache = _paged_backbone(params, cfg, x, pos, cache,
+                                   tp_axis=tp_axis)
+    x = ll.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return unembed(params, cfg, x), new_cache
 
 
 def rollback_cache(cache: Dict, new_len: jnp.ndarray) -> Dict:

@@ -69,11 +69,27 @@ class ContinuousBatcher:
     source lets callers reach prefetch statistics
     (``engine.streaming_stats()``) and guarantees its lifetime spans the
     serving loop.
+
+    ``ctx``: the dense cache's ``max_len``. When set, ``admit`` rejects a
+    request whose ``len(prompt) + max_new`` cannot fit — the dense cache
+    would otherwise silently clip into its clamped last slot. Leave it
+    None only for rolling-SWA caches, whose capacity is a window, not a
+    limit.
+
+    ``kv``: optional ``runtime.kvcache.PagedKVCache``. When set, the
+    threaded cache is the paged pytree and ``decode`` must be the paged
+    step: ``admit`` reserves pages (prefix-sharing identical prompt
+    prefixes) before the prefill and scatters the result in; every step
+    grows/copy-on-writes the write range first; ``_finish`` returns the
+    slot's pages to the pool (hashed prompt pages fall into the prefix
+    cache). Admission is alloc-on-demand — the only rejections are a
+    request larger than the slot's block table and pool exhaustion.
     """
 
     def __init__(self, batch: int, prefill_one: Callable,
                  write_slot: Callable, decode: Callable,
-                 *, eos_id: Optional[int] = None, spec=None, source=None):
+                 *, eos_id: Optional[int] = None, spec=None, source=None,
+                 ctx: Optional[int] = None, kv=None):
         self.B = batch
         self.prefill_one = prefill_one
         self.write_slot = write_slot
@@ -81,6 +97,8 @@ class ContinuousBatcher:
         self.eos_id = eos_id
         self.spec = spec
         self.source = source
+        self.ctx = ctx
+        self.kv = kv
         self.slots = [SlotState() for _ in range(batch)]
         self.finished: List[FinishedRequest] = []
 
@@ -100,14 +118,43 @@ class ContinuousBatcher:
 
     def admit(self, cache, tokens: jnp.ndarray, uid: int,
               prompt: np.ndarray, max_new: int):
-        """Prefill ``prompt`` and place it in a free slot."""
+        """Prefill ``prompt`` and place it in a free slot.
+
+        Dense caches validate ``len(prompt) + max_new`` against ``ctx``
+        up front (a clear error instead of a silent clip); the paged path
+        allocates on demand and rejects only a request that exceeds the
+        slot's block table or exhausts the pool. Speculative engines add
+        ``gamma`` headroom on the paged path — a verify pass transiently
+        writes up to gamma positions past the budget before rollback.
+        """
         free = self.free_slots()
         if not free:
             raise RuntimeError("no free slots")
         slot = free[0]
-        first_tok, slot_cache = self.prefill_one(
-            jnp.asarray(prompt)[None, :])
-        cache = self.write_slot(cache, slot_cache, slot, len(prompt))
+        if self.kv is not None:
+            margin = self.spec.gamma if self.spec is not None else 0
+            self.kv.plan_admit(cache, slot,
+                               [int(t) for t in np.asarray(prompt)],
+                               max_new + margin)
+            try:
+                first_tok, slot_cache = self.prefill_one(
+                    jnp.asarray(prompt)[None, :])
+                cache = self.kv.install(cache, slot, slot_cache["layers"],
+                                        len(prompt))
+            except BaseException:
+                # a failed prefill must not leak the planned pages
+                self.kv.abort_admit(slot)
+                raise
+        else:
+            if self.ctx is not None and len(prompt) + max_new > self.ctx:
+                raise ValueError(
+                    f"request {uid}: prompt ({len(prompt)}) + max_new "
+                    f"({max_new}) exceeds the cache context ({self.ctx}); "
+                    f"the preallocated cache would silently clip — raise "
+                    f"ctx or trim the request")
+            first_tok, slot_cache = self.prefill_one(
+                jnp.asarray(prompt)[None, :])
+            cache = self.write_slot(cache, slot_cache, slot, len(prompt))
         if self.spec is not None:
             self.spec.admit(jnp.asarray(prompt)[None, :], slot, len(prompt))
         tokens = tokens.at[slot, 0].set(first_tok)
@@ -121,17 +168,27 @@ class ContinuousBatcher:
             FinishedRequest(uid=st.uid, tokens=st.generated,
                             proposed=st.proposed, accepted=st.accepted))
         self.slots[i] = SlotState()                      # free immediately
+        if self.kv is not None:
+            self.kv.release_slot(i)
+
+    def kv_stats(self):
+        """Allocator statistics of the attached paged cache (or None)."""
+        return self.kv.stats() if self.kv is not None else None
 
     def step(self, cache, tokens: jnp.ndarray):
         """One decode step for every occupied slot."""
         if self.spec is not None:
             return self._spec_step(cache, tokens)
+        if self.kv is not None:
+            cache = self.kv.begin_step(cache, self.active(), 1)
         logits, cache = self.decode(cache, tokens)
         nxt = jnp.argmax(logits[:, 0], axis=-1)          # greedy
         tokens = nxt[:, None].astype(tokens.dtype)
         for i in self.active():
             st = self.slots[i]
             tok = int(nxt[i])
+            if self.kv is not None:
+                self.kv.advance(i)
             st.generated.append(tok)
             st.remaining -= 1
             if st.remaining <= 0 or (self.eos_id is not None
@@ -143,11 +200,21 @@ class ContinuousBatcher:
         """One draft/verify cycle: every occupied slot advances by up to
         gamma+1 tokens. Tokens emitted past a slot's budget (or past EOS)
         are dropped — the slot frees immediately, exactly like vanilla."""
+        len0 = {}
+        if self.kv is not None:
+            # the verify pass writes gamma+1 positions before rollback
+            cache = self.kv.begin_step(cache, self.active(),
+                                       self.spec.gamma + 1)
+            len0 = {i: self.kv.length(i) for i in self.active()}
         cache, res = self.spec.cycle(cache, tokens, active=self.active())
         tokens = res.next_tokens.astype(tokens.dtype)
         for i in self.active():
             st = self.slots[i]
             n = int(res.n_emit[i])
+            if self.kv is not None:
+                # pages past the accepted length return to the pool — the
+                # allocator half of the rollback (len was already reset)
+                self.kv.trim_to(i, len0[i] + n)
             # counters estimate draft/target *agreement* (the acceptance
             # probability behind E[tokens/cycle]), so verified-but-
             # truncated drafts still count — truncation doesn't bias the
@@ -165,16 +232,62 @@ class ContinuousBatcher:
         return cache, tokens
 
     def run(self, cache, requests, *, max_steps: int = 10_000):
-        """Drive a request list (sorted by arrival) to completion."""
+        """Drive a request list (sorted by arrival) to completion.
+
+        On the paged path a transiently exhausted pool (pages held by
+        slots still decoding) defers the admit until finishes free pages;
+        it only propagates when no active slot could ever free any.
+        """
+        from .kvcache import PoolExhausted
+
         tokens = jnp.zeros((self.B, 1), jnp.int32)
         pending = list(requests)
         steps = 0
         while (pending or self.active()) and steps < max_steps:
             while pending and self.free_slots():
                 req = pending.pop(0)
-                cache, tokens = self.admit(cache, tokens, req.uid,
-                                           req.prompt, req.max_new_tokens)
+                try:
+                    cache, tokens = self.admit(cache, tokens, req.uid,
+                                               req.prompt,
+                                               req.max_new_tokens)
+                except PoolExhausted:
+                    if not self.active():
+                        raise              # nothing will ever free pages
+                    pending.insert(0, req)
+                    break
             if self.active():
                 cache, tokens = self.step(cache, tokens)
             steps += 1
         return self.finished, steps
+
+
+def make_dense_engine(params, cfg, batch: int, ctx: int, *,
+                      eos_id: Optional[int] = None, spec=None,
+                      cache_dtype=jnp.float32) -> ContinuousBatcher:
+    """Reference dense-cache engine wiring (prefill-one / slot-write /
+    decode over ``models.decode_step``) — the single source of the
+    slot-write convention, shared by the serving driver, benchmarks and
+    tests. Drive it with ``eng.run(init_cache(cfg, batch, ctx), reqs)``.
+    """
+    from ..models import model as M
+
+    def prefill_one(prompt):
+        c1 = M.init_cache(cfg, 1, ctx, dtype=cache_dtype)
+        logits, c1 = M.prefill(params, cfg, prompt, c1)
+        return int(jnp.argmax(logits[0, -1])), c1
+
+    def write_slot(cache, slot_cache, slot, length):
+        def wr(dst, src):
+            if dst.ndim >= 2 and dst.shape[1] == batch \
+                    and src.shape[1] == 1:
+                return dst.at[:, slot].set(src[:, 0])
+            return dst
+        new = jax.tree.map(wr, cache, slot_cache)
+        new["len"] = cache["len"].at[slot].set(slot_cache["len"][0])
+        return new
+
+    def decode(cache, tokens):
+        return M.decode_step(params, cfg, cache, tokens)
+
+    return ContinuousBatcher(batch, prefill_one, write_slot, decode,
+                             eos_id=eos_id, spec=spec, ctx=ctx)

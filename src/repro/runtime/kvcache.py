@@ -1,0 +1,748 @@
+"""Paged KV cache: block-pool allocator, prefix reuse, host offload.
+
+The dense cache (``models.model.init_cache``) preallocates
+``(L, B, max_len, ...)`` — memory scales with ``batch * max_len`` no
+matter how many tokens are actually live, which is what OOMs first on
+low-RAM devices and caps ``ContinuousBatcher`` concurrency. This module
+applies the paper's working-window recipe to KV state the way PR 2/3
+applied it to weights:
+
+  * **BlockPool** — fixed-size token pages with refcounts. Sequences own
+    pages only for tokens they actually hold; HBM high-water tracks
+    *active* tokens, not the batch envelope.
+  * **Prefix reuse** — every full prompt page (and the final partial
+    page) is content-addressed by its exact chained token key (compared
+    by value — a collision can never silently share the wrong bytes);
+    identical prompt prefixes retain the same refcounted pages instead
+    of recomputing and re-storing them. Writes into a shared page copy-on-write at the
+    divergence page; writes into a privately-held but still-addressable
+    page unregister its hash first, so the content a hash names is
+    immutable by construction.
+  * **Host offload** — pages whose refcount drops to zero stay resident
+    as an LRU prefix cache; when the pool needs room they are evicted to
+    pinned host copies instead of being discarded. A prefix hit on an
+    offloaded page allocates a fresh device page and fetches the bytes
+    back on a background staging thread (the double-buffer pattern of
+    ``runtime.streaming``), so the H2D copy overlaps the admit's prefill
+    compute exactly like layer prefetch overlaps decode. The fetch
+    timeline reuses ``PrefetchEvent`` so ``core.latency`` can cross-check
+    the offload-traffic term against measurement.
+
+Device state lives in the engine-threaded cache pytree
+(``{"pages", "block_table", "len"}``); this module's classes hold only
+host bookkeeping plus the staging thread, and every device mutation
+takes and returns the cache functionally.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import OrderedDict
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .streaming import PrefetchEvent
+
+Params = Dict[str, Any]
+
+#: page id 0 is a write sink: freed slots keep decoding junk into it (the
+#: batch is fixed-width, inactive rows still run), so it is never handed
+#: out by the allocator and its content is never read unmasked.
+SINK_PAGE = 0
+
+
+class PoolExhausted(RuntimeError):
+    """The block pool cannot satisfy an allocation (clear admit error)."""
+
+
+def chain_key(prev: tuple, tokens: Sequence[int], count: int) -> tuple:
+    """Content key of a prompt page given its predecessor's key.
+
+    The key IS the (nested) token chain, not a digest — lookups compare
+    the actual tokens, so a collision can never silently share another
+    prompt's KV pages. ``count`` participates so a partial page
+    (count < page_tokens) only matches a page with the identical token
+    count — partial pages are shared only between byte-identical
+    prompts. Start the chain with ``()``.
+    """
+    return (prev, count, tuple(int(t) for t in tokens))
+
+
+# --------------------------------------------------------------------------- #
+#  block pool (host-side allocator)
+# --------------------------------------------------------------------------- #
+
+class BlockPool:
+    """Refcounted fixed-size page allocator with an LRU prefix cache.
+
+    Page states:
+      free     — on the free list, content meaningless;
+      active   — refcount >= 1 (held by one or more slots);
+      cached   — refcount 0 but still hash-addressable (prefix cache),
+                 evicted LRU-first when the free list runs dry.
+
+    ``release`` on a page that is not active raises — the double-free is
+    a bug in the caller, not a condition to paper over.
+    """
+
+    def __init__(self, n_pages: int, page_tokens: int):
+        if n_pages < 2:
+            raise ValueError("need >= 2 pages (page 0 is the write sink)")
+        if page_tokens < 1:
+            raise ValueError("page_tokens must be >= 1")
+        self.n_pages = n_pages
+        self.page_tokens = page_tokens
+        self._free: List[int] = list(range(n_pages - 1, SINK_PAGE, -1))
+        self._ref: Dict[int, int] = {}
+        self._hash_of: Dict[int, Any] = {}       # pid -> registered key
+        self._pid_of: Dict[Any, int] = {}        # content key -> pid
+        self._cached: "OrderedDict[int, None]" = OrderedDict()  # LRU, ref 0
+        self.alloc_count = 0
+        self.evictions = 0
+
+    # -- queries ----------------------------------------------------------- #
+
+    def refcount(self, pid: int) -> int:
+        return self._ref.get(pid, 0)
+
+    def lookup(self, h) -> Optional[int]:
+        """Device-resident page registered under content key ``h`` (or
+        None). Keys are compared by value (the exact token chain), so a
+        hit is always the right bytes."""
+        return self._pid_of.get(h)
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_active(self) -> int:
+        return len(self._ref)
+
+    @property
+    def n_cached(self) -> int:
+        return len(self._cached)
+
+    def available(self) -> int:
+        """Pages an alloc burst could obtain (free + evictable cached)."""
+        return len(self._free) + len(self._cached)
+
+    # -- lifecycle --------------------------------------------------------- #
+
+    def alloc(self, *, evict_cb=None) -> int:
+        """Take a page (refcount 1). Falls back to evicting the LRU cached
+        page; ``evict_cb(pid, h)`` runs first so the owner can offload the
+        content. Raises ``PoolExhausted`` when neither source has a page.
+        """
+        if self._free:
+            pid = self._free.pop()
+        elif self._cached:
+            pid, _ = self._cached.popitem(last=False)      # LRU
+            h = self._hash_of.pop(pid)
+            del self._pid_of[h]
+            self.evictions += 1
+            if evict_cb is not None:
+                evict_cb(pid, h)
+        else:
+            raise PoolExhausted(
+                f"KV block pool exhausted: {self.n_pages - 1} pages, "
+                f"{self.n_active} active, none cached/free")
+        self._ref[pid] = 1
+        self.alloc_count += 1
+        return pid
+
+    def retain(self, pid: int) -> None:
+        """Add a reference (prefix share / cached-page revival)."""
+        if pid == SINK_PAGE:
+            raise ValueError("cannot retain the sink page")
+        if pid in self._cached:
+            del self._cached[pid]
+            self._ref[pid] = 1
+        else:
+            if pid not in self._ref:
+                raise ValueError(f"retain of non-active page {pid}")
+            self._ref[pid] += 1
+
+    def release(self, pid: int) -> None:
+        """Drop a reference; at zero the page goes to the prefix cache if
+        hash-addressable, otherwise back to the free list."""
+        n = self._ref.get(pid)
+        if n is None:
+            raise ValueError(f"double free of page {pid}")
+        if n > 1:
+            self._ref[pid] = n - 1
+            return
+        del self._ref[pid]
+        if pid in self._hash_of:
+            self._cached[pid] = None                       # MRU end
+            self._cached.move_to_end(pid)
+        else:
+            self._free.append(pid)
+
+    # -- hash addressing --------------------------------------------------- #
+
+    def register(self, h, pid: int) -> None:
+        """Make an active page addressable by content key ``h``."""
+        if pid not in self._ref:
+            raise ValueError(f"register of non-active page {pid}")
+        old = self._pid_of.get(h)
+        if old is not None and old != pid:
+            # identical content already registered; keep the older page
+            return
+        self._pid_of[h] = pid
+        self._hash_of[pid] = h
+
+    def unregister(self, pid: int) -> None:
+        """Forget a page's hash (it is about to be written in place)."""
+        h = self._hash_of.pop(pid, None)
+        if h is not None:
+            self._pid_of.pop(h, None)
+
+    # -- invariants (tests) ------------------------------------------------ #
+
+    def check(self) -> None:
+        free, active, cached = set(self._free), set(self._ref), \
+            set(self._cached)
+        assert SINK_PAGE not in free | active | cached
+        assert not free & active and not free & cached \
+            and not active & cached
+        assert len(free) + len(active) + len(cached) == self.n_pages - 1
+        assert all(n >= 1 for n in self._ref.values())
+        assert cached <= set(self._hash_of)
+        for h, pid in self._pid_of.items():
+            assert self._hash_of.get(pid) == h
+
+
+# --------------------------------------------------------------------------- #
+#  host offload (staged fetch, streaming.py's double-buffer pattern)
+# --------------------------------------------------------------------------- #
+
+class BlockOffloader:
+    """Host-side store of evicted pages + async device staging.
+
+    ``offload`` (eviction path) copies a page's per-layer bytes to host
+    synchronously — it runs inside an allocation that needs the device
+    page now. ``schedule`` queues the reverse H2D transfer on a worker
+    thread; ``get`` blocks until the staged device tree is ready. Fetches
+    are scheduled at admit time and collected after the admit's prefill
+    compute, so the copy overlaps compute exactly like the layer
+    prefetcher's window reads.
+    """
+
+    def __init__(self) -> None:
+        self._host: Dict[int, Params] = {}                # hash -> np tree
+        self._staged: Dict[int, Params] = {}              # hash -> jnp tree
+        self._queue: List[int] = []
+        self._cv = threading.Condition()
+        self._stop = False
+        self._error: Optional[BaseException] = None
+        self.events: List[PrefetchEvent] = []
+        self.offloaded_bytes = 0
+        self.fetched_bytes = 0
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self) -> None:
+        while True:
+            with self._cv:
+                while not self._queue and not self._stop:
+                    self._cv.wait()
+                if self._stop:
+                    return
+                h = self._queue.pop(0)
+                tree = self._host.get(h)
+            if tree is None:
+                continue
+            try:
+                t0 = time.perf_counter()
+                staged = jax.tree.map(jnp.asarray, tree)   # H2D staging
+                t1 = time.perf_counter()
+            except BaseException as e:   # surface in get(), don't deadlock
+                with self._cv:
+                    self._error = e
+                    self._cv.notify_all()
+                return
+            nbytes = sum(np.asarray(a).nbytes
+                         for a in jax.tree.leaves(tree))
+            with self._cv:
+                self._staged[h] = staged
+                self.events.append(PrefetchEvent(0, t0, t1, nbytes))
+                self.fetched_bytes += nbytes
+                self._cv.notify_all()
+
+    # -- eviction side ----------------------------------------------------- #
+
+    def offload(self, h: int, tree: Params) -> None:
+        nbytes = sum(np.asarray(a).nbytes for a in jax.tree.leaves(tree))
+        with self._cv:
+            self._host[h] = tree
+            self.offloaded_bytes += nbytes
+
+    def holds(self, h: int) -> bool:
+        with self._cv:
+            return h in self._host
+
+    # -- fetch side -------------------------------------------------------- #
+
+    def schedule(self, h: int) -> None:
+        with self._cv:
+            if h in self._staged or h in self._queue:
+                return
+            self._queue.append(h)
+            self._cv.notify_all()
+
+    def get(self, h: int) -> Params:
+        with self._cv:
+            while h not in self._staged:
+                if self._error is not None:
+                    raise RuntimeError(
+                        f"offload fetch of page hash {h} failed") \
+                        from self._error
+                if self._stop:
+                    raise RuntimeError("offloader stopped")
+                self._cv.wait()
+            staged = self._staged.pop(h)
+            self._host.pop(h, None)    # back on device; host copy done
+            return staged
+
+    def close(self) -> None:
+        with self._cv:
+            self._stop = True
+            self._cv.notify_all()
+        self._thread.join(timeout=5.0)
+
+
+# --------------------------------------------------------------------------- #
+#  paged cache manager
+# --------------------------------------------------------------------------- #
+
+@dataclasses.dataclass
+class KVStats:
+    """Allocator + traffic view of a paged-cache run (benchmarks/gates)."""
+
+    n_pages: int
+    page_tokens: int
+    page_bytes: int                   # one page across all layers/leaves
+    active_pages_highwater: int       # max simultaneously-referenced pages
+    active_tokens_highwater: int      # max live tokens across slots
+    prefix_hits: int                  # pages obtained by hash match
+    cow_copies: int
+    evictions: int
+    offloaded_bytes: int
+    fetched_bytes: int
+    fetch_events: List[PrefetchEvent]
+
+    @property
+    def highwater_bytes(self) -> int:
+        return self.active_pages_highwater * self.page_bytes
+
+    def dense_bytes(self, batch: int, max_len: int) -> int:
+        """What the dense (L, B, max_len, ...) preallocation would hold."""
+        per_tok = self.page_bytes / max(self.page_tokens, 1)
+        return int(batch * max_len * per_tok)
+
+
+def paged_cache_spec(cfg) -> Dict[str, Tuple[int, ...]]:
+    """Per-leaf trailing shapes of one cache line (one token, one layer)."""
+    if cfg.family not in ("dense", "moe", "vlm"):
+        raise ValueError(
+            f"paged KV cache unsupported for family {cfg.family} "
+            "(recurrent state has no per-token pages)")
+    if cfg.kv_dtype == "int8":
+        raise NotImplementedError(
+            "paged KV cache does not support int8 KV quantization yet")
+    if cfg.mla:
+        return {"latent": (cfg.kv_lora_rank + cfg.qk_rope_dim,)}
+    return {"k": (max(cfg.kv_heads, 1), cfg.head_dim),
+            "v": (max(cfg.kv_heads, 1), cfg.head_dim)}
+
+
+class PagedKVCache:
+    """Owner of the block pool + per-slot page lists for a serving batch.
+
+    The device arrays live in the cache pytree this class *builds* but
+    does not hold: every mutating method threads the cache through
+    functionally, so the engine's usual ``cache = f(cache, ...)`` flow is
+    preserved and jit boundaries see plain arrays.
+
+    cache = {
+      "pages":       {leaf: (L, P, page_tokens, ...)},
+      "block_table": (B, max_pages_per_slot) int32,
+      "len":         (B,) int32,
+    }
+    """
+
+    def __init__(self, cfg, *, batch: int, ctx: int, n_pages: int,
+                 page_tokens: int = 16, dtype=jnp.float32,
+                 offload: bool = True):
+        self.cfg = cfg
+        self.B = batch
+        self.page_tokens = page_tokens
+        self.max_pages = -(-ctx // page_tokens)
+        self.ctx = self.max_pages * page_tokens
+        self.pool = BlockPool(n_pages, page_tokens)
+        self.offloader = BlockOffloader() if offload else None
+        self._spec = paged_cache_spec(cfg)
+        self.dtype = dtype
+        # host mirrors
+        self._slot_pages: List[List[int]] = [[] for _ in range(batch)]
+        self._len = [0] * batch
+        #: worst-case page budget reserved per live slot (admission
+        #: control): with sum(reserved) <= usable pages, per-step growth
+        #: and CoW can always be satisfied from free + evictable pages,
+        #: so decode never dies mid-step — exhaustion is an admit-time
+        #: signal the engine can defer on.
+        self._reserved = [0] * batch
+        self._usable = n_pages - 1
+        self._dirty = set(range(batch))          # table rows to (re)write
+        #: slot -> [(page kind, content key)] for the admit in flight
+        #: between plan_admit and install ("shared"|"fetched"|"fresh")
+        self._admit_meta: Dict[int, List[Tuple[str, Any]]] = {}
+        # stats
+        self._active_pages_hw = 0
+        self._active_tokens_hw = 0
+        self.prefix_hits = 0
+        self.cow_copies = 0
+
+    # -- construction ------------------------------------------------------ #
+
+    def init_cache(self) -> Dict[str, Any]:
+        L = self.cfg.n_layers
+        P, bs = self.pool.n_pages, self.page_tokens
+        pages = {name: jnp.zeros((L, P, bs) + trail, self.dtype)
+                 for name, trail in self._spec.items()}
+        return {"pages": pages,
+                "block_table": jnp.zeros((self.B, self.max_pages),
+                                         jnp.int32),
+                "len": jnp.zeros((self.B,), jnp.int32)}
+
+    @property
+    def page_bytes(self) -> int:
+        L, bs = self.cfg.n_layers, self.page_tokens
+        itemsize = jnp.zeros((), self.dtype).dtype.itemsize
+        return sum(L * bs * int(np.prod(trail, dtype=np.int64)) * itemsize
+                   for trail in self._spec.values())
+
+    # -- stats ------------------------------------------------------------- #
+
+    def _note_highwater(self) -> None:
+        self._active_pages_hw = max(self._active_pages_hw,
+                                    self.pool.n_active)
+        self._active_tokens_hw = max(self._active_tokens_hw,
+                                     sum(self._len))
+
+    def stats(self) -> KVStats:
+        off = self.offloader
+        return KVStats(
+            n_pages=self.pool.n_pages, page_tokens=self.page_tokens,
+            page_bytes=self.page_bytes,
+            active_pages_highwater=self._active_pages_hw,
+            active_tokens_highwater=self._active_tokens_hw,
+            prefix_hits=self.prefix_hits, cow_copies=self.cow_copies,
+            evictions=self.pool.evictions,
+            offloaded_bytes=off.offloaded_bytes if off else 0,
+            fetched_bytes=off.fetched_bytes if off else 0,
+            fetch_events=list(off.events) if off else [])
+
+    # -- page content ops (functional on the cache) ------------------------ #
+
+    def _evict_cb(self, cache):
+        """Eviction hook: offload the page's bytes to host before reuse."""
+        if self.offloader is None:
+            return None
+
+        def cb(pid, h):
+            tree = {name: np.asarray(arr[:, pid])
+                    for name, arr in cache["pages"].items()}
+            self.offloader.offload(h, tree)
+        return cb
+
+    def _copy_page(self, cache, src: int, dst: int):
+        pages = {name: arr.at[:, dst].set(arr[:, src])
+                 for name, arr in cache["pages"].items()}
+        return {**cache, "pages": pages}
+
+    def _scatter_pages(self, cache, pids: List[int],
+                       trees: List[Params]):
+        """Write page contents (``trees[i]``: {leaf: (L, bs, ...)}) into
+        pool positions ``pids`` — ONE batched update per leaf, so an
+        n-page admit costs one pool-array copy instead of n."""
+        if not pids:
+            return cache
+        idx = jnp.asarray(pids, jnp.int32)
+        pages = dict(cache["pages"])
+        for name in pages:
+            stacked = jnp.stack([jnp.asarray(t[name]) for t in trees],
+                                axis=1)
+            pages[name] = pages[name].at[:, idx].set(
+                stacked.astype(pages[name].dtype))
+        return {**cache, "pages": pages}
+
+    def _sync_tables(self, cache):
+        """Write dirty slots' page lists (and lengths) into the device
+        cache. Runs before the decode writes of a step, when the host
+        mirror and the device counter agree for every live slot."""
+        if not self._dirty:
+            return cache
+        table = np.asarray(cache["block_table"]).copy()
+        lens = np.asarray(cache["len"]).copy()
+        for slot in self._dirty:
+            row = np.full((self.max_pages,), SINK_PAGE, np.int32)
+            pids = self._slot_pages[slot][:self.max_pages]
+            row[:len(pids)] = pids
+            table[slot] = row
+            lens[slot] = self._len[slot]
+        self._dirty.clear()
+        return {**cache, "block_table": jnp.asarray(table),
+                "len": jnp.asarray(lens)}
+
+    # -- admit ------------------------------------------------------------- #
+
+    def plan_admit(self, cache, slot: int, prompt: Sequence[int],
+                   max_new: int) -> Dict[str, int]:
+        """Reserve pages for a prompt: prefix-share where hashes match,
+        schedule background fetches for offloaded matches, allocate the
+        rest (the alloc-on-demand half of the admit contract — the only
+        rejections are a request too long for the slot table and pool
+        exhaustion, both with clear errors).
+
+        Runs *before* the prefill compute so offload fetches overlap it;
+        ``install`` collects them afterwards. ``cache`` is read-only here
+        (eviction offload copies page bytes device->host).
+        """
+        bs = self.page_tokens
+        S, total = len(prompt), len(prompt) + max_new
+        if total > self.ctx:
+            raise ValueError(
+                f"request needs {total} positions (prompt {S} + max_new "
+                f"{max_new}) but the paged slot addresses only "
+                f"{self.ctx} ({self.max_pages} pages x {bs} tokens)")
+        if self._slot_pages[slot]:
+            raise RuntimeError(f"slot {slot} already holds pages")
+        # worst-case lifetime pages: every position paged, +1 for the
+        # copy-on-write clone of a shared divergence page
+        worst = -(-total // bs) + 1
+        committed = sum(self._reserved) + worst
+        if committed > self._usable:
+            raise PoolExhausted(
+                f"KV block pool exhausted: admitting would oversubscribe "
+                f"{committed}/{self._usable} pages "
+                f"({sum(1 for r in self._reserved if r)} slots live)")
+        n_blocks = -(-S // bs)
+        pids: List[int] = []
+        meta: List[Tuple[str, Any]] = []
+        h: tuple = ()
+        try:
+            for j in range(n_blocks):
+                toks = prompt[j * bs:(j + 1) * bs]
+                h = chain_key(h, toks, len(toks))
+                pid = self.pool.lookup(h)
+                if pid is not None:                      # resident hit
+                    self.pool.retain(pid)
+                    kind = "shared"
+                elif self.offloader is not None and self.offloader.holds(h):
+                    pid = self.pool.alloc(evict_cb=self._evict_cb(cache))
+                    self.offloader.schedule(h)
+                    self.pool.register(h, pid)
+                    kind = "fetched"
+                else:
+                    pid = self.pool.alloc(evict_cb=self._evict_cb(cache))
+                    self.pool.register(h, pid)
+                    kind = "fresh"
+                pids.append(pid)
+                meta.append((kind, h))
+        except PoolExhausted:
+            # roll the reservation back whole: pages registered for this
+            # admit were never filled, so they must not survive into the
+            # prefix cache
+            for pid, (kind, _) in zip(pids, meta):
+                if kind != "shared":
+                    self.pool.unregister(pid)
+                self.pool.release(pid)
+            raise
+        self.prefix_hits += sum(1 for k, _ in meta if k != "fresh")
+        self._slot_pages[slot] = pids
+        self._admit_meta[slot] = meta
+        self._reserved[slot] = worst
+        self._dirty.add(slot)
+        return {k: sum(1 for kk, _ in meta if kk == k)
+                for k in ("shared", "fetched", "fresh")}
+
+    def abort_admit(self, slot: int) -> None:
+        """Undo a ``plan_admit`` whose prefill failed: return the slot's
+        pages (un-registering never-filled ones so they cannot enter the
+        prefix cache) and drop its reservation. The engine calls this on
+        any error between plan and install."""
+        meta = self._admit_meta.pop(slot, None)
+        if meta is None:
+            return
+        for pid, (kind, _) in zip(self._slot_pages[slot], meta):
+            if kind != "shared":
+                self.pool.unregister(pid)
+            self.pool.release(pid)
+        self._slot_pages[slot] = []
+        self._reserved[slot] = 0
+        self._len[slot] = 0
+        self._dirty.add(slot)
+
+    def install(self, cache, slot: int, slot_layers: Params,
+                length: int) -> Dict[str, Any]:
+        """Scatter a freshly-prefilled sequence's KV into its pages.
+
+        ``slot_layers``: the per-layer cache of a single-sequence prefill
+        (leaves ``(L, 1, S_cap, ...)``). Pages obtained by prefix share
+        are skipped — their bytes are already correct and rewriting them
+        would defeat the point; offloaded matches are collected from the
+        staging thread here, after the prefill compute they overlapped.
+        """
+        bs = self.page_tokens
+        meta = self._admit_meta.pop(slot)
+        pids_w: List[int] = []
+        trees: List[Params] = []
+        for j, (pid, (kind, h)) in enumerate(
+                zip(self._slot_pages[slot], meta)):
+            if kind == "shared":
+                continue
+            if kind == "fetched":
+                pids_w.append(pid)
+                trees.append(self.offloader.get(h))
+                continue
+            lo = j * bs
+            blk = {}
+            for name, arr in slot_layers.items():
+                # slice/pad on device: no host round-trip of prompt KV
+                piece = jnp.asarray(arr)[:, 0, lo:lo + bs]
+                if piece.shape[1] < bs:                   # partial page
+                    pad = [(0, 0)] * piece.ndim
+                    pad[1] = (0, bs - piece.shape[1])
+                    piece = jnp.pad(piece, pad)
+                blk[name] = piece
+            pids_w.append(pid)
+            trees.append(blk)
+        cache = self._scatter_pages(cache, pids_w, trees)
+        self._len[slot] = length
+        self._dirty.add(slot)
+        cache = self._sync_tables(cache)
+        self._note_highwater()
+        return cache
+
+    # -- per-step maintenance ---------------------------------------------- #
+
+    def begin_step(self, cache, active: Sequence[int], n_tokens: int
+                   ) -> Dict[str, Any]:
+        """Make the next ``n_tokens`` positions of every active slot
+        writable: grow page lists across boundaries, copy-on-write shared
+        pages in the write range, unregister hashes of private pages
+        about to be written, and flush table/len cleanup of freed slots.
+        """
+        bs = self.page_tokens
+        for slot in active:
+            ln = self._len[slot]
+            need = -(-(ln + n_tokens) // bs)
+            if need > self.max_pages:
+                raise PoolExhausted(
+                    f"slot {slot} needs {need} pages "
+                    f"(len {ln} + {n_tokens}) > table width "
+                    f"{self.max_pages}")
+            pids = self._slot_pages[slot]
+            while len(pids) < need:
+                pids.append(self.pool.alloc(
+                    evict_cb=self._evict_cb(cache)))
+                self._dirty.add(slot)
+            first_blk = ln // bs
+            last_blk = (ln + n_tokens - 1) // bs
+            for j in range(first_blk, last_blk + 1):
+                pid = pids[j]
+                if self.pool.refcount(pid) > 1:           # divergence: CoW
+                    new = self.pool.alloc(evict_cb=self._evict_cb(cache))
+                    cache = self._copy_page(cache, pid, new)
+                    self.pool.release(pid)
+                    pids[j] = new
+                    self.cow_copies += 1
+                    self._dirty.add(slot)
+                else:
+                    self.pool.unregister(pid)     # content will change
+        cache = self._sync_tables(cache)
+        self._note_highwater()
+        return cache
+
+    def advance(self, slot: int, n: int = 1) -> None:
+        """Commit ``n`` generated tokens (vanilla decode bookkeeping)."""
+        self._len[slot] += n
+
+    def length(self, slot: int) -> int:
+        """Host-mirrored valid length of ``slot`` (== device ``len`` at
+        step boundaries)."""
+        return self._len[slot]
+
+    def trim_to(self, slot: int, new_len: int) -> None:
+        """Speculative rollback: keep pages covering ``new_len`` tokens,
+        free the rest (rejected drafts past the accepted length)."""
+        bs = self.page_tokens
+        keep = -(-new_len // bs) if new_len > 0 else 0
+        pids = self._slot_pages[slot]
+        for pid in pids[keep:]:
+            self.pool.release(pid)
+        if len(pids) > keep:
+            del pids[keep:]
+            self._dirty.add(slot)
+        self._len[slot] = new_len
+
+    def release_slot(self, slot: int) -> None:
+        """Finished sequence: drop its references. Hashed prompt pages
+        fall into the LRU prefix cache for future admits; private pages
+        return to the free list. Table/len cleanup is applied lazily at
+        the next ``begin_step`` (stale rows only ever feed the masked
+        region until then)."""
+        for pid in self._slot_pages[slot]:
+            self.pool.release(pid)
+        self._slot_pages[slot] = []
+        self._len[slot] = 0
+        self._reserved[slot] = 0
+        self._dirty.add(slot)
+
+    def close(self) -> None:
+        if self.offloader is not None:
+            self.offloader.close()
+
+
+# --------------------------------------------------------------------------- #
+#  continuous-batching integration
+# --------------------------------------------------------------------------- #
+
+def make_paged_engine(params, cfg, batch: int, ctx: int, *, n_pages: int,
+                      page_tokens: int = 16, eos_id: Optional[int] = None,
+                      spec=None, offload: bool = True,
+                      cache_dtype=jnp.float32):
+    """Build a ``ContinuousBatcher`` over a paged KV cache.
+
+    Returns ``(engine, kv)``; drive it with ``engine.run(kv.init_cache(),
+    requests)``. The decode step is ``models.decode_step_paged`` — greedy
+    output is byte-identical to the dense engine's, only where KV lives
+    changes.
+    """
+    from ..models import model as M
+    from .engine import ContinuousBatcher
+
+    kv = PagedKVCache(cfg, batch=batch, ctx=ctx, n_pages=n_pages,
+                      page_tokens=page_tokens, dtype=cache_dtype,
+                      offload=offload)
+
+    def prefill_one(prompt):
+        c1 = M.init_cache(cfg, 1, ctx, dtype=cache_dtype)
+        logits, c1 = M.prefill(params, cfg, prompt, c1)
+        return int(jnp.argmax(logits[0, -1])), c1
+
+    def decode(cache, tokens):
+        return M.decode_step_paged(params, cfg, cache, tokens)
+
+    def write_slot(cache, slot_cache, slot, length):   # paged: kv.install
+        raise RuntimeError("paged engine installs via kv, not write_slot")
+
+    eng = ContinuousBatcher(batch, prefill_one, write_slot, decode,
+                            eos_id=eos_id, spec=spec, kv=kv)
+    return eng, kv

@@ -304,7 +304,8 @@ def make_streaming_engine(source: ParamSource, cfg, batch: int, ctx: int,
         return M.decode_step_layerwise(source, cfg, cache, tokens)
 
     return ContinuousBatcher(batch, prefill_one, write_slot, decode,
-                             eos_id=eos_id, spec=spec, source=source)
+                             eos_id=eos_id, spec=spec, source=source,
+                             ctx=ctx)
 
 
 # --------------------------------------------------------------------------- #

@@ -36,7 +36,7 @@ def _make_engine(cfg, params, B, ctx):
     def decode(cache, tokens):
         return decode_step(params, cfg, cache, tokens)
 
-    return ContinuousBatcher(B, prefill_one, write_slot, decode)
+    return ContinuousBatcher(B, prefill_one, write_slot, decode, ctx=ctx)
 
 
 def test_engine_serves_more_requests_than_slots():
@@ -141,10 +141,10 @@ def test_engine_slot_reuse_after_early_finish():
     assert all(len(f.tokens) >= 1 for f in finished)
 
 
-def test_engine_request_exceeding_context_budget():
-    """A request whose generation would overrun the cache context keeps
-    writing into the clamped last slot but still terminates at its token
-    budget (no crash, slot freed)."""
+def test_engine_rejects_request_exceeding_context_budget():
+    """A request whose generation would overrun the cache context is
+    rejected at admit with a clear error instead of silently clipping
+    into the clamped last cache slot."""
     cfg = dataclasses.replace(get_config("qwen2.5-14b").reduced(),
                               n_layers=2)
     params = init_params(cfg, KEY)
@@ -155,6 +155,33 @@ def test_engine_request_exceeding_context_budget():
     class Req:
         uid = 0
         max_new_tokens = 32          # 10 + 32 >> ctx=16
+    Req.prompt = prompt
+    cache = init_cache(cfg, B, ctx, dtype=jnp.float32)
+    with pytest.raises(ValueError, match="exceeds the cache context"):
+        eng.run(cache, [Req()])
+    # the engine stays usable: nothing was admitted, no slot leaked
+    assert eng.free_slots() == [0, 1]
+    fitting = Req()
+    fitting.max_new_tokens = 4
+    finished, _ = eng.run(cache, [fitting])
+    assert len(finished) == 1 and len(finished[0].tokens) == 4
+
+
+def test_engine_without_ctx_keeps_legacy_clipping():
+    """Engines built without ``ctx`` (rolling-SWA caches have no hard
+    limit) keep the pre-validation behaviour: clamped writes, token
+    budget still honoured."""
+    cfg = dataclasses.replace(get_config("qwen2.5-14b").reduced(),
+                              n_layers=2)
+    params = init_params(cfg, KEY)
+    B, ctx = 2, 16
+    eng = _make_engine(cfg, params, B, ctx)
+    eng.ctx = None
+    prompt = np.asarray(jax.random.randint(KEY, (10,), 0, cfg.vocab))
+
+    class Req:
+        uid = 0
+        max_new_tokens = 32
     Req.prompt = prompt
     cache = init_cache(cfg, B, ctx, dtype=jnp.float32)
     finished, steps = eng.run(cache, [Req()])

@@ -1,0 +1,319 @@
+"""Paged KV-cache model paths + engine integration.
+
+The contract under test: paging changes where KV lives (block pool +
+per-slot tables), never what attention computes — greedy decode through
+the paged paths must be *byte-identical* to the dense cache, including
+the T > 1 speculative verify/rollback path, prefix-shared admits, CoW
+divergence and offload round trips.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import (decode_step, decode_step_paged, init_cache,
+                          init_params, prefill, rollback_cache)
+from repro.runtime.engine import make_dense_engine
+from repro.runtime.kvcache import PagedKVCache, make_paged_engine
+from repro.runtime.speculative import SpeculativeDecoder
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _small(arch, n_layers=2):
+    return dataclasses.replace(get_config(arch).reduced(),
+                               n_layers=n_layers)
+
+
+def _admit_direct(kv, cache, cfg, params, prompts, ctx, max_new=20):
+    """Prefill each sequence separately and install it into the pages."""
+    firsts = []
+    for b in range(prompts.shape[0]):
+        c1 = init_cache(cfg, 1, ctx, dtype=jnp.float32)
+        lg, c1 = prefill(params, cfg, prompts[b:b + 1], c1)
+        kv.plan_admit(cache, b, [int(t) for t in np.asarray(prompts[b])],
+                      max_new)
+        cache = kv.install(cache, b, c1["layers"], prompts.shape[1])
+        firsts.append(int(jnp.argmax(lg[0, -1])))
+    return cache, firsts
+
+
+class _Req:
+    def __init__(self, uid, prompt, max_new):
+        self.uid = uid
+        self.prompt = prompt
+        self.max_new_tokens = max_new
+
+
+def _write_slot(B):
+    def write_slot(cache, slot_cache, slot, length):
+        def wr(dst, src):
+            if dst.ndim >= 2 and dst.shape[1] == B and src.shape[1] == 1:
+                return dst.at[:, slot].set(src[:, 0])
+            return dst
+        new = jax.tree.map(wr, cache, slot_cache)
+        new["len"] = cache["len"].at[slot].set(slot_cache["len"][0])
+        return new
+    return write_slot
+
+
+def _dense_engine(cfg, params, B, ctx):
+    return make_dense_engine(params, cfg, B, ctx)
+
+
+# --------------------------------------------------------------------------- #
+#  byte-identical decode: dense vs paged (dense attention + MLA)
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("arch", ["qwen2.5-14b", "minicpm3-4b",
+                                  "phi3.5-moe-42b-a6.6b"])
+def test_paged_greedy_decode_byte_identical(arch):
+    cfg = _small(arch)
+    params = init_params(cfg, KEY)
+    B, ctx = 2, 64
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, 5), 0,
+                                 cfg.vocab)
+
+    c = init_cache(cfg, B, ctx, dtype=jnp.float32)
+    lg, c = prefill(params, cfg, prompts, c)
+    tok = jnp.argmax(lg[:, -1], -1)[:, None]
+    dense = [np.asarray(tok[:, 0]).tolist()]
+    for _ in range(6):
+        lg, c = decode_step(params, cfg, c, tok)
+        tok = jnp.argmax(lg[:, 0], -1)[:, None]
+        dense.append(np.asarray(tok[:, 0]).tolist())
+
+    kv = PagedKVCache(cfg, batch=B, ctx=ctx, n_pages=32, page_tokens=8)
+    try:
+        cache, firsts = _admit_direct(kv, kv.init_cache(), cfg, params,
+                                      prompts, ctx)
+        tok = jnp.asarray(firsts)[:, None]
+        paged = [np.asarray(tok[:, 0]).tolist()]
+        for _ in range(6):
+            cache = kv.begin_step(cache, [0, 1], 1)
+            lg, cache = decode_step_paged(params, cfg, cache, tok)
+            kv.advance(0), kv.advance(1)
+            tok = jnp.argmax(lg[:, 0], -1)[:, None]
+            paged.append(np.asarray(tok[:, 0]).tolist())
+        assert dense == paged
+        kv.pool.check()
+    finally:
+        kv.close()
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-14b", "minicpm3-4b"])
+def test_paged_multi_token_verify_matches_dense(arch):
+    """T > 1 verify logits identical to dense, spanning page boundaries."""
+    cfg = _small(arch)
+    params = init_params(cfg, KEY)
+    B, ctx, T = 2, 64, 5
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, 6), 0,
+                                 cfg.vocab)
+    c = init_cache(cfg, B, ctx, dtype=jnp.float32)
+    _, c = prefill(params, cfg, prompts, c)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, T), 0, cfg.vocab)
+    lg_d, c_d = decode_step(params, cfg, c, toks)
+
+    kv = PagedKVCache(cfg, batch=B, ctx=ctx, n_pages=32, page_tokens=8)
+    try:
+        cache, _ = _admit_direct(kv, kv.init_cache(), cfg, params,
+                                 prompts, ctx)
+        cache = kv.begin_step(cache, [0, 1], T)    # 6 + 5 crosses a page
+        lg_p, c_p = decode_step_paged(params, cfg, cache, toks)
+        assert jnp.array_equal(lg_d, lg_p)
+        np.testing.assert_array_equal(np.asarray(c_p["len"]),
+                                      np.asarray(c_d["len"]))
+        kv.pool.check()
+    finally:
+        kv.close()
+
+
+def test_paged_rollback_then_decode_matches_prefix():
+    """Paged rollback = reset len + free pages past the accepted length;
+    decoding afterwards must equal the dense rolled-back cache."""
+    cfg = _small("qwen2.5-14b")
+    params = init_params(cfg, KEY)
+    B, ctx, T, keep = 2, 64, 4, 2
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, 6), 0,
+                                 cfg.vocab)
+    c0 = init_cache(cfg, B, ctx, dtype=jnp.float32)
+    _, c0 = prefill(params, cfg, prompts, c0)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, T), 0, cfg.vocab)
+    _, c_spec = decode_step(params, cfg, c0, toks)
+    c_rb = rollback_cache(c_spec, c0["len"] + keep)
+    probe = jax.random.randint(jax.random.PRNGKey(3), (B, 1), 0, cfg.vocab)
+    lg_ref, _ = decode_step(params, cfg, c_rb, probe)
+
+    kv = PagedKVCache(cfg, batch=B, ctx=ctx, n_pages=32, page_tokens=8)
+    try:
+        cache, _ = _admit_direct(kv, kv.init_cache(), cfg, params,
+                                 prompts, ctx)
+        cache = kv.begin_step(cache, [0, 1], T)
+        _, cache = decode_step_paged(params, cfg, cache, toks)
+        cache = rollback_cache(cache, jnp.asarray([6 + keep, 6 + keep]))
+        for b in range(B):
+            kv.trim_to(b, 6 + keep)
+        cache = kv.begin_step(cache, [0, 1], 1)
+        lg_p, _ = decode_step_paged(params, cfg, cache, probe)
+        assert jnp.array_equal(lg_ref, lg_p)
+        kv.pool.check()
+    finally:
+        kv.close()
+
+
+# --------------------------------------------------------------------------- #
+#  engine integration
+# --------------------------------------------------------------------------- #
+
+def test_paged_engine_parity_more_requests_than_slots():
+    cfg = _small("qwen2.5-14b")
+    params = init_params(cfg, KEY)
+    B, ctx = 2, 64
+    rng = np.random.default_rng(3)
+    reqs = [_Req(i, rng.integers(0, cfg.vocab, int(rng.integers(4, 14))),
+                 5) for i in range(7)]
+
+    fin_d, _ = _dense_engine(cfg, params, B, ctx).run(
+        init_cache(cfg, B, ctx, dtype=jnp.float32), reqs)
+    eng, kv = make_paged_engine(params, cfg, B, ctx, n_pages=32,
+                                page_tokens=8)
+    try:
+        fin_p, _ = eng.run(kv.init_cache(), reqs)
+        assert {f.uid: f.tokens for f in fin_d} == \
+            {f.uid: f.tokens for f in fin_p}
+        kv.pool.check()
+        assert kv.pool.n_active == 0          # every slot released
+    finally:
+        kv.close()
+
+
+def test_paged_engine_prefix_share_and_cow():
+    """Identical prompts admitted together share every prompt page once
+    and diverge via copy-on-write — with identical output streams."""
+    cfg = _small("qwen2.5-14b")
+    params = init_params(cfg, KEY)
+    B, ctx = 2, 64
+    prompt = np.random.default_rng(4).integers(0, cfg.vocab, 19)
+    eng, kv = make_paged_engine(params, cfg, B, ctx, n_pages=32,
+                                page_tokens=8)
+    try:
+        fin, _ = eng.run(kv.init_cache(),
+                         [_Req(0, prompt, 5), _Req(1, prompt.copy(), 5)])
+        by = {f.uid: f.tokens for f in fin}
+        assert by[0] == by[1]
+        st = kv.stats()
+        assert st.prefix_hits == 3            # 2 full + 1 partial page
+        assert st.cow_copies >= 1             # divergence page cloned
+        kv.pool.check()
+    finally:
+        kv.close()
+
+
+def test_paged_engine_offload_roundtrip_parity():
+    """Churn past the pool size: cold prefix pages offload to host; a
+    later identical prompt fetches them back and still matches the dense
+    reference byte for byte."""
+    cfg = _small("qwen2.5-14b")
+    params = init_params(cfg, KEY)
+    B, ctx = 2, 64
+    rng = np.random.default_rng(5)
+    p0 = rng.integers(0, cfg.vocab, 16)
+    reqs = [_Req(0, p0, 4)] + \
+        [_Req(i, rng.integers(0, cfg.vocab, 16), 4) for i in range(1, 6)] \
+        + [_Req(6, p0.copy(), 4)]
+
+    fin_d, _ = _dense_engine(cfg, params, B, ctx).run(
+        init_cache(cfg, B, ctx, dtype=jnp.float32), reqs)
+    eng, kv = make_paged_engine(params, cfg, B, ctx, n_pages=10,
+                                page_tokens=8)
+    try:
+        fin_p, _ = eng.run(kv.init_cache(), reqs)
+        assert {f.uid: f.tokens for f in fin_d} == \
+            {f.uid: f.tokens for f in fin_p}
+        st = kv.stats()
+        assert st.evictions > 0 and st.fetched_bytes > 0
+        assert len(st.fetch_events) >= 1
+        kv.pool.check()
+    finally:
+        kv.close()
+
+
+def test_paged_engine_speculative_byte_identical():
+    """Paged target + speculative decoding == dense vanilla greedy, with
+    rollback returning rejected-draft pages to the pool every cycle."""
+    cfg = _small("qwen2.5-14b")
+    params = init_params(cfg, KEY)
+    dcfg = dataclasses.replace(get_config("qwen1.5-0.5b").reduced(),
+                               n_layers=1, vocab=cfg.vocab)
+    dparams = init_params(dcfg, jax.random.PRNGKey(7))
+    B, ctx = 2, 64
+    rng = np.random.default_rng(6)
+    reqs = [_Req(i, rng.integers(0, cfg.vocab, int(rng.integers(4, 10))),
+                 7) for i in range(4)]
+
+    fin_v, _ = _dense_engine(cfg, params, B, ctx).run(
+        init_cache(cfg, B, ctx, dtype=jnp.float32), reqs)
+
+    def d_prefill_one(prompt):
+        c1 = init_cache(dcfg, 1, ctx, dtype=jnp.float32)
+        lg, c1 = prefill(dparams, dcfg, prompt, c1)
+        return int(jnp.argmax(lg[0, -1])), c1
+
+    spec = SpeculativeDecoder(
+        lambda c, t: decode_step(dparams, dcfg, c, t), None, gamma=3,
+        draft_cache=init_cache(dcfg, B, ctx, dtype=jnp.float32),
+        draft_prefill_one=d_prefill_one, draft_write_slot=_write_slot(B))
+    eng, kv = make_paged_engine(params, cfg, B, ctx, n_pages=48,
+                                page_tokens=8, spec=spec)
+    spec.verify = eng.decode
+    try:
+        fin_s, _ = eng.run(kv.init_cache(), reqs)
+        assert {f.uid: f.tokens for f in fin_v} == \
+            {f.uid: f.tokens for f in fin_s}
+        kv.pool.check()
+        assert kv.pool.n_active == 0
+    finally:
+        kv.close()
+
+
+def test_paged_engine_defers_admit_under_transient_pressure():
+    """A pool that can only hold one request at a time serializes the
+    workload instead of crashing: admits wait for finishes to free
+    pages, and every request is still served with correct tokens."""
+    cfg = _small("qwen2.5-14b")
+    params = init_params(cfg, KEY)
+    B, ctx = 2, 64
+    rng = np.random.default_rng(9)
+    reqs = [_Req(i, rng.integers(0, cfg.vocab, 14), 4) for i in range(3)]
+
+    fin_d, _ = _dense_engine(cfg, params, B, ctx).run(
+        init_cache(cfg, B, ctx, dtype=jnp.float32), reqs)
+    # 14-token prompt + 4 new = 2 prompt pages + boundary growth; 5
+    # usable pages fit one request comfortably, never two
+    eng, kv = make_paged_engine(params, cfg, B, ctx, n_pages=6,
+                                page_tokens=8, offload=False)
+    try:
+        fin_p, _ = eng.run(kv.init_cache(), reqs)
+        assert {f.uid: f.tokens for f in fin_d} == \
+            {f.uid: f.tokens for f in fin_p}
+        kv.pool.check()
+    finally:
+        kv.close()
+
+
+def test_paged_engine_rejects_only_on_exhaustion():
+    cfg = _small("qwen2.5-14b")
+    params = init_params(cfg, KEY)
+    eng, kv = make_paged_engine(params, cfg, 2, 64, n_pages=4,
+                                page_tokens=8)
+    try:
+        from repro.runtime.kvcache import PoolExhausted
+
+        with pytest.raises(PoolExhausted, match="exhausted"):
+            eng.run(kv.init_cache(),
+                    [_Req(0, np.arange(30) % cfg.vocab, 4)])
+    finally:
+        kv.close()

@@ -101,3 +101,32 @@ def test_quantized_matmul_model_quality():
     yq = x @ dequantize_q4(qt)
     rel = float(jnp.linalg.norm(y - yq) / jnp.linalg.norm(y))
     assert rel < 0.13, rel
+
+
+def test_qmm_fused_dispatch_matches_dequant_matmul():
+    """layers.qmm: fused-kernel dispatch (eligible shapes) and the
+    dequantize fallback must agree, and plain weights pass through."""
+    from repro.models.layers import q4_fused_eligible, qmm
+
+    x = jax.random.normal(KEY, (2, 3, 128))           # M = 6 (fused)
+    w = jax.random.normal(jax.random.PRNGKey(1), (128, 256))
+    qt = quantize_q4(w)
+    assert q4_fused_eligible(qt)
+    out = qmm(x, qt)
+    want = x @ dequantize_q4(qt)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    # plain-array passthrough
+    np.testing.assert_allclose(np.asarray(qmm(x, w)), np.asarray(x @ w),
+                               rtol=1e-6, atol=1e-6)
+    # M = 384 does not divide the kernel's row tile -> dequant fallback,
+    # same numbers
+    x_big = jax.random.normal(jax.random.PRNGKey(2), (384, 128))
+    np.testing.assert_allclose(np.asarray(qmm(x_big, qt)),
+                               np.asarray(x_big @ dequantize_q4(qt)),
+                               rtol=1e-5, atol=1e-5)
+    # q2 and 3-D (stacked expert) tensors are never fused-eligible
+    from repro.quant import quantize_q2
+    assert not q4_fused_eligible(quantize_q2(w))
+    w3 = jax.random.normal(jax.random.PRNGKey(3), (4, 128, 64))
+    assert not q4_fused_eligible(quantize_q4(w3))

@@ -368,3 +368,36 @@ def test_willneed_missing_layer_file_propagates(store_dir):
         store.willneed(0)                    # intact layer still fine
         with pytest.raises(OSError):
             store.willneed(1)
+
+
+def test_streamed_q4_mla_matches_resident_dequantized(store_dir):
+    """Regression: MLA consumes its o-proj outside ``layers.qmm``'s
+    original call sites — a quantized store streamed through the
+    layer-wise MLA path must still decode (packed ``wo`` routed through
+    the fused dispatch) and match the resident-dequantized tokens."""
+    cfg = _cfg("minicpm3-4b", n_layers=2)
+    params = init_params(cfg, KEY)
+    qp = _quantized(params)
+    dp = dict(params)
+    dp["blocks"] = dequantize_tree(qp["blocks"], jnp.float32)
+    save_param_store(qp, cfg, store_dir)
+
+    B, S, steps = 2, 6, 3
+    toks = jax.random.randint(KEY, (B, S + steps), 0, cfg.vocab)
+    cache_r = init_cache(cfg, B, 32, dtype=jnp.float32)
+    lg_r, cache_r = prefill(dp, cfg, toks[:, :S], cache_r)
+
+    src = StreamingParamSource(ParamStore(store_dir), window=2)
+    try:
+        cache_s = init_cache(cfg, B, 32, dtype=jnp.float32)
+        lg_s, cache_s = prefill_layerwise(src, cfg, toks[:, :S], cache_s)
+        assert _trees_exact(jnp.argmax(lg_r[:, -1], -1),
+                            jnp.argmax(lg_s[:, -1], -1))
+        for t in range(S, S + steps):
+            lg_r, cache_r = decode_step(dp, cfg, cache_r, toks[:, t:t + 1])
+            lg_s, cache_s = decode_step_layerwise(src, cfg, cache_s,
+                                                  toks[:, t:t + 1])
+            assert _trees_exact(jnp.argmax(lg_r[:, 0], -1),
+                                jnp.argmax(lg_s[:, 0], -1))
+    finally:
+        src.close()
