@@ -50,6 +50,27 @@ def main(argv=None) -> int:
                          "stream the packed bytes through the prefetch "
                          "window, dequantizing per layer at use — ~4x "
                          "fewer streamed bytes/layer than bf16")
+    ap.add_argument("--chaos", choices=("none", "transient", "failover"),
+                    default="none",
+                    help="fault-injection smoke: 'transient' injects "
+                         "retryable disk faults into the streamed "
+                         "layer-wise decode and requires byte-identical "
+                         "recovery; 'failover' kills a ring stage "
+                         "mid-decode and requires the elastic re-solve "
+                         "to resume with zero tokens lost (both exit "
+                         "nonzero on a failed recovery)")
+    ap.add_argument("--chaos-faults", type=int, default=3,
+                    help="consecutive transient faults to inject "
+                         "(capped at --io-retries: retries re-hit the "
+                         "fault window)")
+    ap.add_argument("--io-retries", type=int, default=3,
+                    help="IOPolicy: max retries per I/O op before the "
+                         "error is classified fatal")
+    ap.add_argument("--io-backoff-ms", type=float, default=10.0,
+                    help="IOPolicy: base exponential-backoff delay")
+    ap.add_argument("--io-deadline-s", type=float, default=30.0,
+                    help="IOPolicy: per-op deadline; a stalled read "
+                         "surfaces as StallTimeout instead of hanging")
     ap.add_argument("--paged-kv", action="store_true",
                     help="also run continuous batching over the paged KV "
                          "cache (block-pool allocator + prefix reuse + "
@@ -152,8 +173,131 @@ def main(argv=None) -> int:
             print("paged-kv: int8 KV quantization not paged yet — skipped")
         else:
             _paged_smoke(cfg, params, args)
+    if args.chaos != "none":
+        if cfg.family not in ("dense", "moe", "vlm", "ssm"):
+            print(f"chaos: unsupported family {cfg.family} — skipped")
+        else:
+            _chaos_smoke(cfg, params, prompts, args,
+                         ring_ctx=(mesh, stages, tp) if ring else None)
     print("sample token ids:", np.asarray(nxt).ravel()[:8].tolist())
     return 0
+
+
+def _io_policy(args):
+    from ..runtime.iopolicy import IOPolicy
+
+    return IOPolicy(max_retries=args.io_retries,
+                    backoff_base_s=args.io_backoff_ms / 1e3,
+                    backoff_max_s=max(args.io_backoff_ms / 1e3, 0.1),
+                    op_deadline_s=args.io_deadline_s,
+                    get_timeout_s=2 * args.io_deadline_s)
+
+
+def _chaos_smoke(cfg, params, prompts, args, *, ring_ctx=None) -> None:
+    """Fault-injection smoke: recovery is the pass criterion."""
+    import shutil
+    import tempfile
+
+    from ..models import decode_step_layerwise
+    from ..runtime.faults import FaultInjector, FaultSpec, FaultyStore
+    from ..runtime.paramstore import ParamStore, save_param_store
+    from ..runtime.streaming import StreamingParamSource
+
+    policy = _io_policy(args)
+    B = prompts.shape[0]
+    sdir = tempfile.mkdtemp(prefix="chaos_store_")
+    try:
+        save_param_store(params, cfg, sdir)
+        if args.chaos == "transient":
+            def decode(store, pol=None):
+                with StreamingParamSource(store, window=2,
+                                          policy=pol) as src:
+                    c = init_cache(cfg, B, args.ctx, dtype=jnp.float32)
+                    lg, c = prefill(params, cfg, prompts, c)
+                    tok = jnp.argmax(lg[:, -1], -1)[:, None]
+                    out = [np.asarray(tok)]
+                    for _ in range(args.new_tokens):
+                        lg, c = decode_step_layerwise(src, cfg, c, tok)
+                        tok = jnp.argmax(lg[:, 0], -1)[:, None]
+                        out.append(np.asarray(tok))
+                    return np.concatenate(out, 1), src.stats()
+
+            clean, _ = decode(ParamStore(sdir))
+            n = min(args.chaos_faults, policy.max_retries)
+            inj = FaultInjector([FaultSpec(op="layer_read", after=4,
+                                           times=n)])
+            chaos, st = decode(FaultyStore(ParamStore(sdir), inj),
+                               policy)
+            if not np.array_equal(clean, chaos):
+                raise SystemExit("chaos transient: tokens DIVERGED "
+                                 "after retry recovery")
+            print(f"chaos transient: {len(inj.fired)} injected disk "
+                  f"faults absorbed by retry/backoff "
+                  f"({st.retries} retries in PrefetchStats); tokens "
+                  f"byte-identical to the clean run")
+        else:   # failover
+            from ..runtime.failover import ElasticRingServer
+
+            if ring_ctx is None:
+                print("chaos failover: ring path unavailable — skipped")
+                return
+            _, stages, tp = ring_ctx
+            if len(jax.devices()) < stages * tp:
+                print(f"chaos failover: needs {stages * tp} devices — "
+                      "skipped")
+                return
+
+            class Counting:
+                def __init__(self, store):
+                    self.store, self.reads = store, 0
+
+                def layer(self, i):
+                    self.reads += 1
+                    return self.store.layer(i)
+
+                def __getattr__(self, name):
+                    return getattr(self.store, name)
+
+            counting = Counting(ParamStore(sdir))
+            srv = ElasticRingServer(cfg, counting, params, batch=B,
+                                    ctx=args.ctx, n_stages=stages,
+                                    tp=tp, k=args.ring_k, policy=policy)
+            try:
+                srv.generate(np.asarray(prompts, np.int32), 2)
+            finally:
+                srv.close()
+                counting.close()
+
+            inj = FaultInjector([FaultSpec(
+                op="layer_read", mode="stage_failure", stage=1,
+                after=counting.reads, times=1)])
+            store = FaultyStore(ParamStore(sdir), inj)
+            srv = ElasticRingServer(cfg, store, params, batch=B,
+                                    ctx=args.ctx, n_stages=stages,
+                                    tp=tp, k=args.ring_k, policy=policy)
+            try:
+                toks = srv.generate(np.asarray(prompts, np.int32),
+                                    args.new_tokens)
+            finally:
+                srv.close()
+                store.close()
+            if not srv.events:
+                raise SystemExit("chaos failover: injected stage death "
+                                 "never surfaced")
+            ev = srv.events[0]
+            if ev.tokens_lost or toks.shape[1] != args.new_tokens:
+                raise SystemExit(f"chaos failover: lost "
+                                 f"{ev.tokens_lost} tokens")
+            print(f"chaos failover: stage {ev.failed_stage} died at "
+                  f"token {ev.token_index}; ring {ev.n_stages_before}->"
+                  f"{ev.n_stages_after} stages, replayed "
+                  f"{ev.replayed_tokens} tokens, recovered in "
+                  f"{ev.recovery_s:.2f}s (detect {ev.detect_s * 1e3:.1f}"
+                  f" ms, re-solve {ev.resolve_s * 1e3:.1f} ms, rebuild "
+                  f"{ev.rebuild_s:.2f}s, replay {ev.replay_s:.2f}s), "
+                  f"0 tokens lost")
+    finally:
+        shutil.rmtree(sdir, ignore_errors=True)
 
 
 def _paged_smoke(cfg, params, args) -> None:
@@ -238,7 +382,8 @@ def _stream_smoke(cfg, params, prompts, args, *, ring_ctx=None) -> None:
                   f"({probe.layer_nbytes / raw:.2f}x)")
         probe.close()
 
-        with StreamingParamSource(ParamStore(sdir), window=W) as src:
+        with StreamingParamSource(ParamStore(sdir), window=W,
+                                  policy=_io_policy(args)) as src:
             c_s = init_cache(cfg, B, args.ctx, dtype=jnp.float32)
             lg, c_s = prefill(params, cfg, prompts, c_s)
             tok = jnp.argmax(lg[:, -1], -1)[:, None]
@@ -268,7 +413,8 @@ def _stream_smoke(cfg, params, prompts, args, *, ring_ctx=None) -> None:
             drv = StreamingRingDriver(
                 cfg, mesh, plan, ParamStore(sdir), head_params=head,
                 cache_like=c_r,
-                prefetch_depth=max(1, W // max(plan.w, 1)))
+                prefetch_depth=max(1, W // max(plan.w, 1)),
+                policy=_io_policy(args))
             ln = c_r["len"]
             tok = jnp.zeros((B, 1), jnp.int32)
             t0 = time.time()

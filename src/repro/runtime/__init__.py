@@ -1,2 +1,2 @@
-from . import (checkpoint, elastic, kvcache, optim, paramstore, serve,
-               sharding, streaming, train)  # noqa
+from . import (checkpoint, elastic, failover, faults, iopolicy, kvcache,
+               optim, paramstore, serve, sharding, streaming, train)  # noqa

@@ -47,6 +47,16 @@ class FinishedRequest:
         return self.accepted / max(self.proposed, 1)
 
 
+@dataclasses.dataclass
+class RejectedRequest:
+    """A request the engine shed instead of admitting (graceful
+    degradation): the pool can never hold it, or its admit starved past
+    the deferral TTL. ``reason`` is the operator-facing explanation."""
+
+    uid: int
+    reason: str
+
+
 class ContinuousBatcher:
     """Slot-multiplexed decode over a fixed-width batch.
 
@@ -101,6 +111,7 @@ class ContinuousBatcher:
         self.kv = kv
         self.slots = [SlotState() for _ in range(batch)]
         self.finished: List[FinishedRequest] = []
+        self.rejected: List[RejectedRequest] = []
 
     def streaming_stats(self):
         """Prefetch statistics of the attached streaming source (or None)."""
@@ -231,17 +242,24 @@ class ContinuousBatcher:
                     break
         return cache, tokens
 
-    def run(self, cache, requests, *, max_steps: int = 10_000):
+    def run(self, cache, requests, *, max_steps: int = 10_000,
+            admit_patience: int = 256):
         """Drive a request list (sorted by arrival) to completion.
 
         On the paged path a transiently exhausted pool (pages held by
         slots still decoding) defers the admit until finishes free pages;
         it only propagates when no active slot could ever free any.
+        Deferral is bounded: a request that cannot fit an *empty* pool
+        (``kv.can_ever_admit``) or whose admit has been refused for
+        ``admit_patience`` consecutive steps is shed onto
+        ``self.rejected`` with a clear "pool too small for request"
+        error instead of starving the run.
         """
         from .kvcache import PoolExhausted
 
         tokens = jnp.zeros((self.B, 1), jnp.int32)
         pending = list(requests)
+        deferrals: Dict[int, int] = {}
         steps = 0
         while (pending or self.active()) and steps < max_steps:
             while pending and self.free_slots():
@@ -250,9 +268,33 @@ class ContinuousBatcher:
                     cache, tokens = self.admit(cache, tokens, req.uid,
                                                req.prompt,
                                                req.max_new_tokens)
-                except PoolExhausted:
+                    deferrals.pop(req.uid, None)
+                except PoolExhausted as e:
                     if not self.active():
                         raise              # nothing will ever free pages
+                    margin = self.spec.gamma if self.spec is not None \
+                        else 0
+                    if self.kv is not None and not self.kv.can_ever_admit(
+                            len(req.prompt),
+                            req.max_new_tokens + margin):
+                        # deferring cannot help: even an empty pool is
+                        # too small — shed now with the classified reason
+                        self.rejected.append(RejectedRequest(
+                            uid=req.uid,
+                            reason=f"pool too small for request "
+                                   f"{req.uid}: {e}"))
+                        continue
+                    n = deferrals.get(req.uid, 0) + 1
+                    if n > admit_patience:
+                        deferrals.pop(req.uid, None)
+                        self.rejected.append(RejectedRequest(
+                            uid=req.uid,
+                            reason=f"pool too small for request "
+                                   f"{req.uid}: admission deferred "
+                                   f"{n - 1} consecutive steps without "
+                                   f"a slot freeing enough pages ({e})"))
+                        continue
+                    deferrals[req.uid] = n
                     pending.insert(0, req)
                     break
             if self.active():

@@ -36,6 +36,7 @@ takes and returns the cache functionally.
 from __future__ import annotations
 
 import dataclasses
+import logging
 import threading
 import time
 from collections import OrderedDict
@@ -45,7 +46,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .iopolicy import IOPolicy, StallTimeout, WorkerHealth
 from .streaming import PrefetchEvent
+
+log = logging.getLogger(__name__)
 
 Params = Dict[str, Any]
 
@@ -233,18 +237,29 @@ class BlockOffloader:
     prefetcher's window reads.
     """
 
-    def __init__(self) -> None:
+    def __init__(self, *, policy: Optional[IOPolicy] = None,
+                 injector=None) -> None:
+        self.policy = policy or IOPolicy()
+        self.injector = injector          # faults.FaultInjector or None
+        self.health = WorkerHealth(name="BlockOffloader")
         self._host: Dict[int, Params] = {}                # hash -> np tree
         self._staged: Dict[int, Params] = {}              # hash -> jnp tree
         self._queue: List[int] = []
         self._cv = threading.Condition()
         self._stop = False
+        self._closed = False
+        self._interrupted = False
         self._error: Optional[BaseException] = None
         self.events: List[PrefetchEvent] = []
         self.offloaded_bytes = 0
         self.fetched_bytes = 0
         self._thread = threading.Thread(target=self._worker, daemon=True)
         self._thread.start()
+
+    def _h2d(self, tree: Params) -> Params:
+        if self.injector is not None:
+            self.injector.check("kv_h2d")
+        return jax.tree.map(jnp.asarray, tree)            # H2D staging
 
     def _worker(self) -> None:
         while True:
@@ -259,8 +274,17 @@ class BlockOffloader:
                 continue
             try:
                 t0 = time.perf_counter()
-                staged = jax.tree.map(jnp.asarray, tree)   # H2D staging
+                staged = self.policy.run("kv_h2d",
+                                         lambda: self._h2d(tree),
+                                         health=self.health)
                 t1 = time.perf_counter()
+            except (KeyboardInterrupt, SystemExit):
+                # control flow: unblock waiters, then die loudly
+                with self._cv:
+                    self._stop = True
+                    self._interrupted = True
+                    self._cv.notify_all()
+                raise
             except BaseException as e:   # surface in get(), don't deadlock
                 with self._cv:
                     self._error = e
@@ -277,7 +301,16 @@ class BlockOffloader:
     # -- eviction side ----------------------------------------------------- #
 
     def offload(self, h: int, tree: Params) -> None:
-        nbytes = sum(np.asarray(a).nbytes for a in jax.tree.leaves(tree))
+        def put():
+            if self.injector is not None:
+                self.injector.check("kv_d2h")
+            return sum(np.asarray(a).nbytes
+                       for a in jax.tree.leaves(tree))
+
+        # the D2H copy happened in the eviction callback; this commits the
+        # host store (and is where an injected kv_d2h fault surfaces) —
+        # transient faults retry under the shared policy
+        nbytes = self.policy.run("kv_d2h", put, health=self.health)
         with self._cv:
             self._host[h] = tree
             self.offloaded_bytes += nbytes
@@ -295,25 +328,47 @@ class BlockOffloader:
             self._queue.append(h)
             self._cv.notify_all()
 
-    def get(self, h: int) -> Params:
+    def get(self, h: int, *, timeout: Optional[float] = None) -> Params:
+        if timeout is None:
+            timeout = self.policy.get_timeout_s
+        deadline = time.monotonic() + timeout
         with self._cv:
             while h not in self._staged:
                 if self._error is not None:
                     raise RuntimeError(
-                        f"offload fetch of page hash {h} failed") \
-                        from self._error
+                        f"offload fetch of page hash {h} failed "
+                        f"({self.health.report()})") from self._error
                 if self._stop:
-                    raise RuntimeError("offloader stopped")
-                self._cv.wait()
+                    raise RuntimeError(
+                        "offloader stopped" + (
+                            " (worker interrupted)" if self._interrupted
+                            else ""))
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    self.health.stalled = True
+                    raise StallTimeout(
+                        f"offloaded page not staged within {timeout:.1f}s "
+                        f"({self.health.report()})", op="kv_h2d")
+                self._cv.wait(min(remaining, 0.25))
             staged = self._staged.pop(h)
             self._host.pop(h, None)    # back on device; host copy done
             return staged
 
-    def close(self) -> None:
+    def close(self, timeout: float = 5.0) -> bool:
+        """Stop the worker (idempotent); True once it has joined, False
+        with a logged stall report if it is stuck."""
         with self._cv:
+            self._closed = True
             self._stop = True
             self._cv.notify_all()
-        self._thread.join(timeout=5.0)
+        self._thread.join(timeout=timeout)
+        if self._thread.is_alive():
+            self.health.stalled = True
+            log.error("BlockOffloader.close: worker failed to join "
+                      "within %.1fs — %s", timeout, self.health.report())
+            return False
+        self.health.closed = True
+        return True
 
 
 # --------------------------------------------------------------------------- #
@@ -378,14 +433,17 @@ class PagedKVCache:
 
     def __init__(self, cfg, *, batch: int, ctx: int, n_pages: int,
                  page_tokens: int = 16, dtype=jnp.float32,
-                 offload: bool = True):
+                 offload: bool = True,
+                 io_policy: Optional[IOPolicy] = None, injector=None):
         self.cfg = cfg
         self.B = batch
         self.page_tokens = page_tokens
         self.max_pages = -(-ctx // page_tokens)
         self.ctx = self.max_pages * page_tokens
         self.pool = BlockPool(n_pages, page_tokens)
-        self.offloader = BlockOffloader() if offload else None
+        self.offloader = BlockOffloader(policy=io_policy,
+                                        injector=injector) \
+            if offload else None
         self._spec = paged_cache_spec(cfg)
         self.dtype = dtype
         # host mirrors
@@ -501,6 +559,19 @@ class PagedKVCache:
                 "len": jnp.asarray(lens)}
 
     # -- admit ------------------------------------------------------------- #
+
+    def can_ever_admit(self, prompt_len: int, max_new: int) -> bool:
+        """Could this request be admitted into an *empty* pool?
+
+        False means deferral is pointless — no amount of completed slots
+        frees enough pages — so the engine sheds the request immediately
+        with a clear "pool too small" error instead of starving it.
+        """
+        total = prompt_len + max_new
+        if total > self.ctx:
+            return False
+        worst = -(-total // self.page_tokens) + 1
+        return worst <= self._usable
 
     def plan_admit(self, cache, slot: int, prompt: Sequence[int],
                    max_new: int) -> Dict[str, int]:
@@ -717,7 +788,9 @@ class PagedKVCache:
 def make_paged_engine(params, cfg, batch: int, ctx: int, *, n_pages: int,
                       page_tokens: int = 16, eos_id: Optional[int] = None,
                       spec=None, offload: bool = True,
-                      cache_dtype=jnp.float32):
+                      cache_dtype=jnp.float32,
+                      io_policy: Optional[IOPolicy] = None,
+                      injector=None):
     """Build a ``ContinuousBatcher`` over a paged KV cache.
 
     Returns ``(engine, kv)``; drive it with ``engine.run(kv.init_cache(),
@@ -730,7 +803,8 @@ def make_paged_engine(params, cfg, batch: int, ctx: int, *, n_pages: int,
 
     kv = PagedKVCache(cfg, batch=batch, ctx=ctx, n_pages=n_pages,
                       page_tokens=page_tokens, dtype=cache_dtype,
-                      offload=offload)
+                      offload=offload, io_policy=io_policy,
+                      injector=injector)
 
     def prefill_one(prompt):
         c1 = M.init_cache(cfg, 1, ctx, dtype=cache_dtype)

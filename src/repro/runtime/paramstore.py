@@ -43,6 +43,7 @@ import jax
 import numpy as np
 
 from ..quant.grouped import QuantizedTensor
+from .iopolicy import ShortReadError
 
 Params = Dict[str, Any]
 
@@ -314,11 +315,36 @@ class ParamStore(ParamSource):
     def _map(self, i: int) -> mmap.mmap:
         mm = self._maps.get(i)
         if mm is None:
-            f = open(os.path.join(self.directory, _layer_file(i)), "rb")
-            mm = mmap.mmap(f.fileno(), 0, access=mmap.ACCESS_READ)
+            path = os.path.join(self.directory, _layer_file(i))
+            f = open(path, "rb")
+            try:
+                mm = mmap.mmap(f.fileno(), 0, access=mmap.ACCESS_READ)
+            except ValueError as e:      # zero-length file: truncated away
+                f.close()
+                raise ShortReadError(
+                    f"layer {i}: cannot map {path} "
+                    f"({os.path.getsize(path)} bytes, manifest requires "
+                    f"{self.layer_nbytes}): {e}", layer=i, path=path,
+                    expected=self.layer_nbytes,
+                    got=os.path.getsize(path)) from e
             self._files[i] = f
             self._maps[i] = mm
         return mm
+
+    def reopen(self, i: int) -> None:
+        """Drop layer ``i``'s cached mapping so the next read re-opens and
+        re-maps the file — ``IOPolicy``'s retry hook after a transient
+        read error (flaky disk, file replaced/re-flushed underneath us).
+        """
+        mm = self._maps.pop(i, None)
+        f = self._files.pop(i, None)
+        if mm is not None:
+            try:
+                mm.close()
+            except BufferError:   # an old view pins the map; re-map fresh
+                pass
+        if f is not None:
+            f.close()
 
     @staticmethod
     def _read_leaves(specs: List[LeafSpec], buf: np.ndarray, *,
@@ -361,6 +387,18 @@ class ParamStore(ParamSource):
         if not 0 <= i < self.n_layers:
             raise IndexError(i)
         mm = self._map(i)
+        if len(mm) < self.layer_nbytes:
+            # the file shrank after the manifest loaded: classify it as a
+            # short read naming the layer/file instead of letting
+            # np.frombuffer throw a bare ValueError (fatal under IOPolicy,
+            # which would mask that a retry with reopen() could succeed)
+            path = os.path.join(self.directory, _layer_file(i))
+            raise ShortReadError(
+                f"layer {i} short read: {path} maps {len(mm)} bytes but "
+                f"the manifest requires {self.layer_nbytes} "
+                f"(file truncated after manifest load?)",
+                layer=i, path=path, expected=self.layer_nbytes,
+                got=len(mm))
         buf = np.frombuffer(mm, dtype=np.uint8, count=self.layer_nbytes)
         return self._read_leaves(self._leaves, buf)
 

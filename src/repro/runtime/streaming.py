@@ -41,6 +41,7 @@ the ~4x-smaller packed footprint, and dequantization happens at use
 from __future__ import annotations
 
 import dataclasses
+import logging
 import threading
 import time
 from collections import deque
@@ -50,9 +51,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .iopolicy import IOPolicy, StallTimeout, WorkerHealth
 from .paramstore import ParamSource, ParamStore
 
 Params = Dict[str, Any]
+
+log = logging.getLogger(__name__)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,6 +87,7 @@ class PrefetchStats:
     stall_s: float                    # compute blocked waiting on a layer
     layers_served: int
     releases: int
+    retries: int = 0                  # transient I/O retries (IOPolicy)
 
     @property
     def bytes_per_layer(self) -> float:
@@ -118,17 +123,22 @@ class LayerPrefetcher:
     """
 
     def __init__(self, store: ParamStore, *, window: int = 4,
-                 device_put: bool = True):
+                 device_put: bool = True,
+                 policy: Optional[IOPolicy] = None):
         if window < 1:
             raise ValueError("window must be >= 1")
         self.store = store
         self.window = min(window, store.n_layers)
         self.device_put = device_put
+        self.policy = policy or IOPolicy()
+        self.health = WorkerHealth(name="LayerPrefetcher")
         self._buf: Dict[int, Tuple[Params, int]] = {}   # layer -> (tree, nb)
         self._queue: deque = deque()
         self._inflight: set = set()
         self._cv = threading.Condition()
         self._stop = False
+        self._closed = False
+        self._interrupted = False
         self._error: Optional[BaseException] = None
         self._events: List[PrefetchEvent] = []
         self._resident = 0
@@ -140,6 +150,11 @@ class LayerPrefetcher:
         self._thread.start()
 
     # -- worker ------------------------------------------------------------ #
+
+    def _reopen(self, i: int) -> None:
+        reopen = getattr(self.store, "reopen", None)
+        if reopen is not None:
+            reopen(i)
 
     def _stage(self, i: int) -> Tuple[Params, int, float, float]:
         """Copy layer i out of the mmap into private buffers (+ device)."""
@@ -167,7 +182,19 @@ class LayerPrefetcher:
                 i = self._queue.popleft()
                 self._inflight.add(i)
             try:
-                staged, nbytes, t0, t1 = self._stage(i)
+                staged, nbytes, t0, t1 = self.policy.run(
+                    f"layer_read[{i}]", lambda: self._stage(i),
+                    reopen=lambda: self._reopen(i), health=self.health)
+            except (KeyboardInterrupt, SystemExit):
+                # control flow, never a latched I/O error: unblock any
+                # waiting get() (it raises "prefetcher stopped") and let
+                # the exception terminate the worker thread
+                with self._cv:
+                    self._stop = True
+                    self._interrupted = True
+                    self._inflight.discard(i)
+                    self._cv.notify_all()
+                raise
             except BaseException as e:   # surface in get(), don't deadlock
                 with self._cv:
                     self._error = e
@@ -203,7 +230,14 @@ class LayerPrefetcher:
                 self._resident -= nbytes
                 self.store.release(j)
 
-    def get(self, i: int) -> Params:
+    def get(self, i: int, *, timeout: Optional[float] = None) -> Params:
+        """Block until layer ``i`` is staged, at most ``timeout`` seconds
+        (default: the policy's ``get_timeout_s``) — a wedged worker
+        becomes a :class:`StallTimeout` with a health report, never an
+        unbounded block."""
+        if timeout is None:
+            timeout = self.policy.get_timeout_s
+        deadline = time.monotonic() + timeout
         with self._cv:
             self._schedule_locked(i)
             self._release_locked(i)
@@ -211,10 +245,21 @@ class LayerPrefetcher:
             while i not in self._buf:
                 if self._error is not None:
                     raise RuntimeError(
-                        f"prefetch of layer {i} failed") from self._error
+                        f"prefetch of layer {i} failed "
+                        f"({self.health.report()})") from self._error
                 if self._stop:
-                    raise RuntimeError("prefetcher stopped")
-                self._cv.wait()
+                    raise RuntimeError(
+                        "prefetcher stopped" + (
+                            " (worker interrupted)" if self._interrupted
+                            else ""))
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    self.health.stalled = True
+                    raise StallTimeout(
+                        f"layer {i} not staged within {timeout:.1f}s "
+                        f"({self.health.report()})",
+                        op=f"layer_read[{i}]")
+                self._cv.wait(min(remaining, 0.25))
             self._stall += time.perf_counter() - t0
             self._served += 1
             return self._buf[i][0]
@@ -224,13 +269,29 @@ class LayerPrefetcher:
             return PrefetchStats(
                 events=list(self._events), peak_resident_bytes=self._peak,
                 total_bytes_read=self._read, stall_s=self._stall,
-                layers_served=self._served, releases=self.store.released)
+                layers_served=self._served, releases=self.store.released,
+                retries=self.health.retries)
 
-    def close(self) -> None:
+    def close(self, timeout: float = 5.0) -> bool:
+        """Stop the worker; returns True once it has actually joined.
+
+        Idempotent: a second call re-checks the join without re-stopping.
+        A thread that fails to join within ``timeout`` is reported as a
+        stall (logged with the health record) and left daemonized; the
+        object is unusable either way.
+        """
         with self._cv:
+            self._closed = True
             self._stop = True
             self._cv.notify_all()
-        self._thread.join(timeout=5.0)
+        self._thread.join(timeout=timeout)
+        if self._thread.is_alive():
+            self.health.stalled = True
+            log.error("LayerPrefetcher.close: worker failed to join "
+                      "within %.1fs — %s", timeout, self.health.report())
+            return False
+        self.health.closed = True
+        return True
 
 
 class StreamingParamSource(ParamSource):
@@ -242,11 +303,13 @@ class StreamingParamSource(ParamSource):
     """
 
     def __init__(self, store: ParamStore, *, window: int = 4,
-                 device_put: bool = True):
+                 device_put: bool = True,
+                 policy: Optional[IOPolicy] = None):
         self.store = store
         self.n_layers = store.n_layers
         self.prefetcher = LayerPrefetcher(store, window=window,
-                                          device_put=device_put)
+                                          device_put=device_put,
+                                          policy=policy)
         head = store.head()
         if device_put:
             head = jax.tree.map(jnp.asarray, head)
@@ -260,6 +323,9 @@ class StreamingParamSource(ParamSource):
 
     def stats(self) -> PrefetchStats:
         return self.prefetcher.stats()
+
+    def health(self) -> WorkerHealth:
+        return self.prefetcher.health
 
     def close(self) -> None:
         self.prefetcher.close()
@@ -325,12 +391,15 @@ class RingBankPrefetcher:
     """
 
     def __init__(self, store: ParamStore, cfg, mesh, plan, *,
-                 bank_specs, depth: int = 2):
+                 bank_specs, depth: int = 2,
+                 policy: Optional[IOPolicy] = None):
         from . import serve as RS
 
         self.store = store
         self.plan = plan
         self.depth = max(depth, 1)
+        self.policy = policy or IOPolicy()
+        self.health = WorkerHealth(name="RingBankPrefetcher")
         self._sharding = jax.tree.map(
             lambda s: jax.sharding.NamedSharding(mesh, s), bank_specs)
         n_steps = plan.k * plan.n_stages + plan.n_stages - 1
@@ -349,6 +418,8 @@ class RingBankPrefetcher:
         self._banks: Dict[int, Any] = {}
         self._cv = threading.Condition()
         self._stop = False
+        self._closed = False
+        self._interrupted = False
         self._error: Optional[BaseException] = None
         self._want: deque = deque()
         self._front = -1                  # last consumed step
@@ -361,18 +432,30 @@ class RingBankPrefetcher:
 
     # -- staging ----------------------------------------------------------- #
 
+    def _reopen(self, layer: int) -> None:
+        reopen = getattr(self.store, "reopen", None)
+        if reopen is not None:
+            reopen(layer)
+
+    def _read_np(self, layer: int) -> Params:
+        views = self.store.layer(layer)
+        return jax.tree.map(lambda a: np.array(a, copy=True), views)
+
     def _layer_np(self, layer: int) -> Params:
         if layer >= self.n_layers:              # ring padding rows
             if self._zero is None:
-                proto = self.store.layer(0)
+                proto = self.policy.run(
+                    "layer_read[0]", lambda: self._read_np(0),
+                    reopen=lambda: self._reopen(0), health=self.health)
                 self._zero = jax.tree.map(
                     lambda a: np.zeros(a.shape, a.dtype), proto)
             return self._zero
         staged = self._staged.get(layer)
         if staged is None:
             t0 = time.perf_counter()
-            staged = jax.tree.map(lambda a: np.array(a, copy=True),
-                                  self.store.layer(layer))
+            staged = self.policy.run(
+                f"layer_read[{layer}]", lambda: self._read_np(layer),
+                reopen=lambda: self._reopen(layer), health=self.health)
             t1 = time.perf_counter()
             nbytes = sum(a.nbytes for a in jax.tree.leaves(staged))
             with self._cv:    # bookkeeping races with done()'s releases
@@ -404,6 +487,13 @@ class RingBankPrefetcher:
                 t = self._want.popleft()
             try:
                 bank = self._build_bank(t)
+            except (KeyboardInterrupt, SystemExit):
+                # control flow: unblock waiters, then die loudly
+                with self._cv:
+                    self._stop = True
+                    self._interrupted = True
+                    self._cv.notify_all()
+                raise
             except BaseException as e:   # surface in get(), don't deadlock
                 with self._cv:
                     self._error = e
@@ -423,16 +513,29 @@ class RingBankPrefetcher:
             self._want.extend(range(self.n_steps))
             self._cv.notify_all()
 
-    def get(self, t: int):
+    def get(self, t: int, *, timeout: Optional[float] = None):
+        if timeout is None:
+            timeout = self.policy.get_timeout_s
+        deadline = time.monotonic() + timeout
         with self._cv:
             while t not in self._banks:
                 if self._error is not None:
                     raise RuntimeError(
-                        f"bank staging for step {t} failed") \
-                        from self._error
+                        f"bank staging for step {t} failed "
+                        f"({self.health.report()})") from self._error
                 if self._stop:
-                    raise RuntimeError("bank prefetcher stopped")
-                self._cv.wait()
+                    raise RuntimeError(
+                        "bank prefetcher stopped" + (
+                            " (worker interrupted)" if self._interrupted
+                            else ""))
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    self.health.stalled = True
+                    raise StallTimeout(
+                        f"bank for step {t} not staged within "
+                        f"{timeout:.1f}s ({self.health.report()})",
+                        op=f"bank_build[{t}]")
+                self._cv.wait(min(remaining, 0.25))
             return self._banks[t]
 
     def done(self, t: int) -> None:
@@ -455,13 +558,24 @@ class RingBankPrefetcher:
                 events=list(self._events), peak_resident_bytes=self._peak,
                 total_bytes_read=self._read, stall_s=0.0,
                 layers_served=len(self._events),
-                releases=self.store.released)
+                releases=self.store.released,
+                retries=self.health.retries)
 
-    def close(self) -> None:
+    def close(self, timeout: float = 5.0) -> bool:
+        """Stop the worker (idempotent); True once it has joined, False
+        with a logged stall report if it is stuck."""
         with self._cv:
+            self._closed = True
             self._stop = True
             self._cv.notify_all()
-        self._thread.join(timeout=5.0)
+        self._thread.join(timeout=timeout)
+        if self._thread.is_alive():
+            self.health.stalled = True
+            log.error("RingBankPrefetcher.close: worker failed to join "
+                      "within %.1fs — %s", timeout, self.health.report())
+            return False
+        self.health.closed = True
+        return True
 
 
 class StreamingRingDriver:
@@ -479,20 +593,24 @@ class StreamingRingDriver:
 
     def __init__(self, cfg, mesh, plan, store: ParamStore, *,
                  head_params: Params, cache_like, n_tokens: int = 1,
-                 prefetch_depth: int = 2):
+                 prefetch_depth: int = 2,
+                 policy: Optional[IOPolicy] = None):
         from . import serve as RS
 
         self.cfg = cfg
         self.plan = plan
+        policy = policy or IOPolicy()
+        layer_like = policy.run("layer_read[0]", lambda: store.layer(0))
         fns, bank_specs = RS.build_ring_stream_step(
-            cfg, mesh, plan, head_params, cache_like, store.layer(0),
+            cfg, mesh, plan, head_params, cache_like, layer_like,
             n_tokens=n_tokens)
         self._embed, self._micro, self._final = fns
         self.head_params = head_params
         self.n_tokens = n_tokens
         self.prefetch = RingBankPrefetcher(store, cfg, mesh, plan,
                                            bank_specs=bank_specs,
-                                           depth=prefetch_depth)
+                                           depth=prefetch_depth,
+                                           policy=policy)
         self.n_steps = self.prefetch.n_steps
 
     def step(self, tokens, ln, cache):
@@ -522,5 +640,8 @@ class StreamingRingDriver:
     def stats(self) -> PrefetchStats:
         return self.prefetch.stats()
 
-    def close(self) -> None:
-        self.prefetch.close()
+    def health(self) -> WorkerHealth:
+        return self.prefetch.health
+
+    def close(self, timeout: float = 5.0) -> bool:
+        return self.prefetch.close(timeout=timeout)

@@ -1,0 +1,209 @@
+"""Elastic ring failover: an injected stage failure mid-decode must
+trigger an elastic re-solve, rebuild on the survivors, and resume from
+the last emitted token — post-recovery tokens bit-identical to a clean
+run on the survivor mesh fed the same history."""
+import dataclasses
+import shutil
+import tempfile
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.profiles import paper_table2_cluster
+from repro.models import init_params
+from repro.runtime import elastic
+from repro.runtime.failover import ElasticRingServer, FailoverEvent
+from repro.runtime.faults import FaultInjector, FaultSpec, FaultyStore
+from repro.runtime.iopolicy import IOPolicy
+from repro.runtime.paramstore import ParamStore, save_param_store
+
+from test_elastic_cluster import model_70b
+
+KEY = jax.random.PRNGKey(0)
+
+needs_8_devices = pytest.mark.skipif(
+    jax.device_count() < 8, reason="needs 8 CPU devices (conftest sets flag)")
+
+FAST = IOPolicy(max_retries=2, backoff_base_s=0.002, backoff_max_s=0.01,
+                op_deadline_s=10.0, get_timeout_s=30.0)
+
+B, S, MAX_NEW, N_STAGES, TP = 8, 4, 6, 4, 2
+
+
+def _cfg():
+    return dataclasses.replace(get_config("qwen2.5-14b").reduced(),
+                               n_layers=8)
+
+
+class _Counting:
+    """ParamStore proxy that counts layer reads (to find a mid-decode
+    call index for the fault schedule)."""
+
+    def __init__(self, store):
+        self.store = store
+        self.reads = 0
+
+    def layer(self, i):
+        self.reads += 1
+        return self.store.layer(i)
+
+    def __getattr__(self, name):
+        return getattr(self.store, name)
+
+
+@pytest.fixture(scope="module")
+def ring_env():
+    cfg = _cfg()
+    params = init_params(cfg, KEY)
+    d = tempfile.mkdtemp(prefix="test_failover_")
+    save_param_store(params, cfg, d)
+    prompts = np.asarray(jax.random.randint(KEY, (B, S), 0, cfg.vocab),
+                         np.int32)
+    # probe: a short clean run on the full 4-stage ring measures how many
+    # layer reads precede "two tokens emitted" — the chaos schedules fire
+    # at that call index, i.e. somewhere mid-decode
+    counting = _Counting(ParamStore(d))
+    srv = ElasticRingServer(cfg, counting, params, batch=B, ctx=32,
+                            n_stages=N_STAGES, tp=TP, policy=FAST)
+    try:
+        probe = srv.generate(prompts, 2)
+    finally:
+        srv.close()
+        counting.close()
+    env = dict(cfg=cfg, params=params, dir=d, prompts=prompts,
+               probe=probe, reads_2=counting.reads)
+    yield env
+    shutil.rmtree(d, ignore_errors=True)
+
+
+def _reference(env, n_stages, k, history_tokens, n_new):
+    """Clean run on an ``n_stages`` ring fed prompt+history as prompt."""
+    ref = ElasticRingServer(env["cfg"], ParamStore(env["dir"]),
+                            env["params"], batch=B, ctx=32,
+                            n_stages=n_stages, tp=TP, k=k, policy=FAST)
+    try:
+        pr = np.concatenate([env["prompts"], history_tokens], axis=1) \
+            if history_tokens.shape[1] else env["prompts"]
+        return ref.generate(pr, n_new)
+    finally:
+        ref.close()
+        ref.store.close()
+
+
+@needs_8_devices
+def test_stage_failure_triggers_elastic_failover(ring_env):
+    env = ring_env
+    inj = FaultInjector([FaultSpec(op="layer_read", mode="stage_failure",
+                                   stage=1, after=env["reads_2"],
+                                   times=1)])
+    store = FaultyStore(ParamStore(env["dir"]), inj)
+    srv = ElasticRingServer(
+        env["cfg"], store, env["params"], batch=B, ctx=32,
+        n_stages=N_STAGES, tp=TP, policy=FAST,
+        device_profiles=paper_table2_cluster(),
+        model_profile=model_70b())
+    try:
+        toks = srv.generate(env["prompts"], MAX_NEW)
+    finally:
+        srv.close()
+        store.close()
+
+    assert toks.shape == (B, MAX_NEW)
+    assert len(inj.fired) == 1               # the stage really died once
+    assert len(srv.events) == 1
+    ev = srv.events[0]
+    assert isinstance(ev, FailoverEvent)
+    assert ev.failed_stage == 1
+    assert ev.n_stages_before == N_STAGES
+    # batch 8 % 3 != 0: graceful degradation drops a healthy stage too
+    assert ev.n_stages_after == 2
+    assert ev.tokens_lost == 0
+    assert 1 <= ev.token_index < MAX_NEW
+    assert ev.replayed_tokens == S + ev.token_index
+    assert ev.recovery_s > 0
+    assert ev.halda is not None and ev.halda["k"] >= 1   # re-solve ran
+    assert ev.plan["n_stages"] == 2
+
+    # pre-failure tokens match the healthy 4-stage run
+    n_pre = min(ev.token_index, env["probe"].shape[1])
+    assert np.array_equal(toks[:, :n_pre], env["probe"][:, :n_pre])
+    # post-recovery tokens are bit-identical to a clean run on the
+    # survivor mesh fed the same history (resume, not restart)
+    ref = _reference(env, ev.plan["n_stages"], ev.plan["k"],
+                     toks[:, :ev.token_index], MAX_NEW - ev.token_index)
+    assert np.array_equal(toks[:, ev.token_index:], ref)
+
+
+@needs_8_devices
+def test_unattributed_failure_rebuilds_same_stages(ring_env):
+    env = ring_env
+    # a fatal non-stage error (poisoned read) is not attributed to a
+    # stage: the server rebuilds the same 4-stage ring and resumes
+    inj = FaultInjector([FaultSpec(op="layer_read", mode="error",
+                                   error_type=ValueError,
+                                   after=env["reads_2"], times=1)])
+    store = FaultyStore(ParamStore(env["dir"]), inj)
+    srv = ElasticRingServer(env["cfg"], store, env["params"], batch=B,
+                            ctx=32, n_stages=N_STAGES, tp=TP, policy=FAST)
+    try:
+        toks = srv.generate(env["prompts"], MAX_NEW)
+    finally:
+        srv.close()
+        store.close()
+
+    assert len(srv.events) == 1
+    ev = srv.events[0]
+    assert ev.failed_stage is None
+    assert ev.n_stages_after == N_STAGES
+    assert ev.tokens_lost == 0
+    ref = _reference(env, N_STAGES, ev.plan["k"],
+                     toks[:, :ev.token_index], MAX_NEW - ev.token_index)
+    assert np.array_equal(toks[:, ev.token_index:], ref)
+
+
+@needs_8_devices
+def test_failover_budget_exhausted_reraises(ring_env):
+    env = ring_env
+    inj = FaultInjector([FaultSpec(op="layer_read", times=-1)])
+    store = FaultyStore(ParamStore(env["dir"]), inj)
+    srv = ElasticRingServer(env["cfg"], store, env["params"], batch=B,
+                            ctx=32, n_stages=N_STAGES, tp=TP, policy=FAST,
+                            max_failovers=1)
+    try:
+        with pytest.raises(Exception):
+            srv.generate(env["prompts"], MAX_NEW)
+    finally:
+        srv.close()
+        store.close()
+
+
+def test_feasible_shrinks_survivors_to_batch_divisor():
+    cfg = _cfg()
+    params = init_params(cfg, KEY)
+    srv = ElasticRingServer(cfg, object(), params, batch=8, ctx=32,
+                            n_stages=4, tp=2)
+    st = elastic.fail_stages(srv.state, cfg, [1])   # 3 survivors: 8 % 3
+    st = srv._feasible(st)
+    assert len(st.stages) == 2 and srv.batch % len(st.stages) == 0
+
+
+def test_feasible_raises_when_no_ring_fits():
+    # tp wider than the machine: even a 1-stage ring needs tp devices
+    cfg = _cfg()
+    params = init_params(cfg, KEY)
+    srv = ElasticRingServer(cfg, object(), params, batch=8, ctx=32,
+                            n_stages=4, tp=2 * jax.device_count())
+    with pytest.raises(RuntimeError, match="no feasible ring"):
+        srv._feasible(srv.state)
+
+
+def test_recovery_s_property():
+    ev = FailoverEvent(token_index=3, failed_stage=1, generation=1,
+                       n_stages_before=4, n_stages_after=2,
+                       plan={"n_stages": 2, "k": 2, "w": 2, "L_pad": 8},
+                       halda=None, detect_s=0.1, resolve_s=0.2,
+                       rebuild_s=0.3, replay_s=0.4, tokens_lost=0,
+                       replayed_tokens=6)
+    assert ev.recovery_s == pytest.approx(1.0)

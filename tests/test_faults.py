@@ -1,0 +1,504 @@
+"""Chaos suite: deterministic fault injection against the streaming
+runtime — transient faults must retry to byte-identical output, permanent
+faults must fail fast with classified errors, stalls must become
+timeouts, and pool pressure must shed requests instead of starving."""
+import dataclasses
+import os
+import shutil
+import tempfile
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import decode_step_layerwise, init_cache, init_params, \
+    prefill
+from repro.runtime.engine import make_dense_engine
+from repro.runtime.faults import (FaultInjector, FaultSpec, FaultyStore,
+                                  InjectedFault)
+from repro.runtime.iopolicy import (IOPolicy, FatalIOError, ShortReadError,
+                                    StallTimeout, StageFailure,
+                                    WorkerHealth, find_cause)
+from repro.runtime.kvcache import BlockOffloader, PagedKVCache, \
+    make_paged_engine
+from repro.runtime.paramstore import ParamStore, save_param_store
+from repro.runtime.streaming import LayerPrefetcher, StreamingParamSource
+
+KEY = jax.random.PRNGKey(0)
+
+#: fast knobs so retry/backoff/deadline paths run in milliseconds
+FAST = IOPolicy(max_retries=3, backoff_base_s=0.002, backoff_max_s=0.01,
+                op_deadline_s=5.0, get_timeout_s=10.0)
+
+
+def _cfg(arch="qwen2.5-14b", n_layers=3, **over):
+    return dataclasses.replace(get_config(arch).reduced(),
+                               n_layers=n_layers, **over)
+
+
+@pytest.fixture()
+def store_dir():
+    d = tempfile.mkdtemp(prefix="test_faults_")
+    yield d
+    shutil.rmtree(d, ignore_errors=True)
+
+
+class _Req:
+    def __init__(self, uid, prompt, max_new):
+        self.uid = uid
+        self.prompt = prompt
+        self.max_new_tokens = max_new
+
+
+# --------------------------------------------------------------------------- #
+#  IOPolicy unit behavior
+# --------------------------------------------------------------------------- #
+
+def test_policy_classify():
+    p = IOPolicy()
+    assert p.classify(OSError("eio")) == "transient"
+    assert p.classify(ShortReadError("short")) == "transient"
+    assert p.classify(InjectedFault("x")) == "transient"
+    assert p.classify(ValueError("shape")) == "fatal"
+    assert p.classify(StageFailure("dead")) == "fatal"
+    assert p.classify(FatalIOError("gone")) == "fatal"
+
+
+def test_policy_retries_transient_then_succeeds():
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise OSError("flaky disk")
+        return "ok"
+
+    h = WorkerHealth(name="t")
+    assert FAST.run("layer_read[0]", flaky, health=h) == "ok"
+    assert calls["n"] == 3
+    assert h.retries == 2 and h.failures == 2
+    assert h.consecutive_failures == 0       # progress reset
+
+
+def test_policy_fatal_error_no_retry():
+    calls = {"n": 0}
+
+    def bad():
+        calls["n"] += 1
+        raise ValueError("corrupt shape")
+
+    with pytest.raises(FatalIOError, match="fatal error"):
+        FAST.run("layer_read[0]", bad)
+    assert calls["n"] == 1                   # no retry on fatal
+
+
+def test_policy_retries_exhausted_is_classified():
+    with pytest.raises(FatalIOError, match="retries exhausted") as ei:
+        FAST.run("op", lambda: (_ for _ in ()).throw(OSError("eio")))
+    assert ei.value.attempts == FAST.max_retries + 1
+    assert isinstance(ei.value.__cause__, OSError)
+
+
+def test_policy_deadline_becomes_stall_timeout():
+    p = IOPolicy(max_retries=10_000, backoff_base_s=0.02,
+                 backoff_max_s=0.02, op_deadline_s=0.1)
+    t0 = time.monotonic()
+    with pytest.raises(StallTimeout, match="deadline"):
+        p.run("op", lambda: (_ for _ in ()).throw(OSError("eio")))
+    assert time.monotonic() - t0 < 2.0       # fails fast, not 10k retries
+
+
+def test_policy_reopen_called_between_attempts():
+    reopens = []
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise OSError("eio")
+        return calls["n"]
+
+    FAST.run("op", flaky, reopen=lambda: reopens.append(1))
+    assert reopens == [1]
+
+
+def test_policy_propagates_control_flow():
+    with pytest.raises(KeyboardInterrupt):
+        FAST.run("op", lambda: (_ for _ in ()).throw(KeyboardInterrupt()))
+
+
+# --------------------------------------------------------------------------- #
+#  injector determinism
+# --------------------------------------------------------------------------- #
+
+def test_injector_schedule_window_exact():
+    inj = FaultInjector([FaultSpec(op="layer_read", after=2, times=2)])
+    fired = []
+    for i in range(6):
+        try:
+            inj.check("layer_read", key=i)
+        except InjectedFault:
+            fired.append(i)
+    assert fired == [2, 3]                   # window [after, after+times)
+    assert inj.counts() == [(6, 2)]
+    assert inj.exhausted()
+
+
+def test_injector_key_scoping():
+    inj = FaultInjector([FaultSpec(op="layer_read", key=1, times=-1)])
+    inj.check("layer_read", key=0)           # other key: clean
+    inj.check("kv_h2d", key=1)               # other op: clean
+    with pytest.raises(InjectedFault):
+        inj.check("layer_read", key=1)
+
+
+def test_injector_seeded_prob_deterministic():
+    def pattern(seed):
+        inj = FaultInjector(
+            [FaultSpec(op="layer_read", prob=0.5, times=-1)], seed=seed)
+        out = []
+        for i in range(64):
+            try:
+                inj.check("layer_read", key=i)
+                out.append(0)
+            except InjectedFault:
+                out.append(1)
+        return out
+
+    a, b = pattern(7), pattern(7)
+    assert a == b                            # same seed -> same firings
+    assert 0 < sum(a) < 64                   # actually probabilistic
+    assert pattern(8) != a                   # seed participates
+
+
+def test_injector_stage_failure_mode():
+    inj = FaultInjector([FaultSpec(op="layer_read",
+                                   mode="stage_failure", stage=2)])
+    with pytest.raises(StageFailure) as ei:
+        inj.check("layer_read", key=5)
+    assert ei.value.stage == 2
+
+
+# --------------------------------------------------------------------------- #
+#  mid-stream truncation (satellite: classified error naming layer/file)
+# --------------------------------------------------------------------------- #
+
+def _truncate(path, frac=0.5):
+    size = os.path.getsize(path)
+    with open(path, "rb+") as f:
+        f.truncate(int(size * frac))
+    return size
+
+
+def test_truncated_layer_is_classified_short_read(store_dir):
+    cfg = _cfg()
+    save_param_store(init_params(cfg, KEY), cfg, store_dir)
+    with ParamStore(store_dir) as store:
+        store.layer(0)                       # manifest + layer 0 fine
+        path = os.path.join(store_dir, "layer_00001.bin")
+        _truncate(path)
+        with pytest.raises(ShortReadError) as ei:
+            store.layer(1)
+        assert ei.value.layer == 1
+        assert "layer_00001.bin" in str(ei.value)
+        assert ei.value.got < ei.value.expected
+
+
+def test_truncated_to_zero_is_classified(store_dir):
+    cfg = _cfg()
+    save_param_store(init_params(cfg, KEY), cfg, store_dir)
+    with ParamStore(store_dir) as store:
+        _truncate(os.path.join(store_dir, "layer_00002.bin"), 0.0)
+        with pytest.raises(ShortReadError, match="layer_00002.bin"):
+            store.layer(2)
+
+
+def test_reopen_recovers_restored_file(store_dir):
+    cfg = _cfg()
+    save_param_store(init_params(cfg, KEY), cfg, store_dir)
+    path = os.path.join(store_dir, "layer_00001.bin")
+    with open(path, "rb") as f:
+        original = f.read()
+    with ParamStore(store_dir) as store:
+        ref = jax.tree.map(lambda a: np.array(a, copy=True),
+                           store.layer(1))
+        store.reopen(1)
+        _truncate(path)
+        with pytest.raises(ShortReadError):
+            store.layer(1)
+        with open(path, "wb") as f:          # writer finishes the flush
+            f.write(original)
+        with pytest.raises(ShortReadError):
+            store.layer(1)                   # stale mapping still short
+        store.reopen(1)                      # the IOPolicy retry hook
+        back = store.layer(1)
+        flags = jax.tree.map(
+            lambda x, y: bool(np.array_equal(np.asarray(x),
+                                             np.asarray(y))), ref, back)
+        assert all(jax.tree.leaves(flags))
+
+
+def test_prefetcher_truncation_fails_classified_not_shape_crash(store_dir):
+    cfg = _cfg()
+    save_param_store(init_params(cfg, KEY), cfg, store_dir)
+    _truncate(os.path.join(store_dir, "layer_00001.bin"))
+    store = ParamStore(store_dir)
+    pf = LayerPrefetcher(store, window=2, policy=FAST)
+    try:
+        pf.get(0)                            # healthy layer still serves
+        with pytest.raises(RuntimeError, match="prefetch of layer 1") \
+                as ei:
+            pf.get(1)
+        short = find_cause(ei.value, ShortReadError)
+        assert short is not None and short.layer == 1
+        assert "layer_00001.bin" in str(short)
+    finally:
+        pf.close()
+        store.close()
+
+
+# --------------------------------------------------------------------------- #
+#  transient faults during streamed decode: retry to identical tokens
+# --------------------------------------------------------------------------- #
+
+def _stream_decode(cfg, params, store, prompts, n_tokens, *, policy=None):
+    src = StreamingParamSource(store, window=2, policy=policy)
+    try:
+        cache = init_cache(cfg, prompts.shape[0], 32, dtype=jnp.float32)
+        logits, cache = prefill(params, cfg, prompts, cache)
+        tok = jnp.argmax(logits[:, -1], -1)[:, None]
+        out = [np.asarray(tok[:, 0])]
+        for _ in range(n_tokens - 1):
+            logits, cache = decode_step_layerwise(src, cfg, cache, tok)
+            tok = jnp.argmax(logits[:, 0], -1)[:, None]
+            out.append(np.asarray(tok[:, 0]))
+        return np.stack(out, 1), src.stats()
+    finally:
+        src.close()
+
+
+def test_transient_disk_faults_recover_byte_identical(store_dir):
+    cfg = _cfg()
+    params = init_params(cfg, KEY)
+    save_param_store(params, cfg, store_dir)
+    prompts = jnp.asarray(
+        np.random.default_rng(3).integers(0, cfg.vocab, (2, 5)))
+
+    clean, _ = _stream_decode(cfg, params, ParamStore(store_dir),
+                              prompts, 6)
+    inj = FaultInjector([FaultSpec(op="layer_read", after=4, times=3)])
+    faulty_store = FaultyStore(ParamStore(store_dir), inj)
+    chaos, stats = _stream_decode(cfg, params, faulty_store, prompts, 6,
+                                  policy=FAST)
+    assert np.array_equal(clean, chaos)      # byte-identical recovery
+    assert len(inj.fired) == 3               # the faults really fired
+    assert stats.retries >= 3                # visible in PrefetchStats
+
+
+def test_permanent_fault_fails_fast_classified(store_dir):
+    cfg = _cfg()
+    save_param_store(init_params(cfg, KEY), cfg, store_dir)
+    inj = FaultInjector([FaultSpec(op="layer_read", times=-1)])
+    store = FaultyStore(ParamStore(store_dir), inj)
+    pf = LayerPrefetcher(store, window=2, policy=FAST)
+    try:
+        t0 = time.monotonic()
+        with pytest.raises(RuntimeError, match="prefetch of layer") as ei:
+            pf.get(0)
+        assert time.monotonic() - t0 < 5.0   # fail fast, no hang
+        fatal = find_cause(ei.value, FatalIOError)
+        assert fatal is not None and fatal.attempts == FAST.max_retries + 1
+    finally:
+        pf.close()
+        store.close()
+
+
+def test_stalled_worker_becomes_get_timeout(store_dir):
+    cfg = _cfg()
+    save_param_store(init_params(cfg, KEY), cfg, store_dir)
+    inj = FaultInjector([FaultSpec(op="layer_read", mode="stall",
+                                   delay_s=0.6, times=-1)])
+    store = FaultyStore(ParamStore(store_dir), inj)
+    pf = LayerPrefetcher(store, window=1,
+                         policy=dataclasses.replace(FAST,
+                                                    get_timeout_s=0.25))
+    try:
+        with pytest.raises(StallTimeout, match="not staged within"):
+            pf.get(0)
+        # worker still wedged inside the stall: close() must report it
+        assert pf.close(timeout=0.05) is False
+        assert pf.health.stalled
+    finally:
+        # the injected stall ends and the worker exits; close is
+        # idempotent and eventually observes the join
+        deadline = time.monotonic() + 10.0
+        while not pf.close(timeout=0.2) and time.monotonic() < deadline:
+            pass
+        assert pf.close(timeout=0.2) is True
+        store.close()
+
+
+def test_interrupt_is_not_latched_as_io_error(store_dir):
+    cfg = _cfg()
+    save_param_store(init_params(cfg, KEY), cfg, store_dir)
+    inj = FaultInjector([FaultSpec(op="layer_read",
+                                   error_type=KeyboardInterrupt)])
+    store = FaultyStore(ParamStore(store_dir), inj)
+    hook, threading.excepthook = threading.excepthook, lambda a: None
+    pf = LayerPrefetcher(store, window=1, policy=FAST)
+    try:
+        with pytest.raises(RuntimeError, match="worker interrupted"):
+            pf.get(0)
+        assert pf._error is None             # never latched as I/O error
+    finally:
+        threading.excepthook = hook
+        pf.close()
+        store.close()
+
+
+def test_prefetcher_close_idempotent(store_dir):
+    cfg = _cfg()
+    save_param_store(init_params(cfg, KEY), cfg, store_dir)
+    store = ParamStore(store_dir)
+    pf = LayerPrefetcher(store, window=2, policy=FAST)
+    pf.get(0)
+    assert pf.close() is True
+    assert pf.close() is True                # double-stop: no-op
+    store.close()
+
+
+# --------------------------------------------------------------------------- #
+#  BlockOffloader H2D/D2H faults
+# --------------------------------------------------------------------------- #
+
+def _page_tree():
+    return {"k": np.arange(8, dtype=np.float32).reshape(2, 4),
+            "v": np.ones((2, 4), np.float32)}
+
+
+def test_offloader_transient_h2d_retries():
+    inj = FaultInjector([FaultSpec(op="kv_h2d", times=2)])
+    off = BlockOffloader(policy=FAST, injector=inj)
+    try:
+        off.offload(("h",), _page_tree())
+        off.schedule(("h",))
+        out = off.get(("h",))
+        assert np.array_equal(np.asarray(out["k"]), _page_tree()["k"])
+        assert off.health.retries >= 2
+        assert off.fetched_bytes > 0
+    finally:
+        off.close()
+
+
+def test_offloader_transient_d2h_retries():
+    inj = FaultInjector([FaultSpec(op="kv_d2h", times=1)])
+    off = BlockOffloader(policy=FAST, injector=inj)
+    try:
+        off.offload(("h",), _page_tree())    # retried under the policy
+        assert off.health.retries >= 1
+        assert off.holds(("h",))
+    finally:
+        off.close()
+
+
+def test_offloader_permanent_fault_fails_fast():
+    inj = FaultInjector([FaultSpec(op="kv_h2d", times=-1)])
+    off = BlockOffloader(policy=FAST, injector=inj)
+    try:
+        off.offload(("h",), _page_tree())
+        off.schedule(("h",))
+        t0 = time.monotonic()
+        with pytest.raises(RuntimeError, match="offload fetch") as ei:
+            off.get(("h",))
+        assert time.monotonic() - t0 < 5.0
+        assert find_cause(ei.value, FatalIOError) is not None
+    finally:
+        assert off.close() is True
+        assert off.close() is True           # idempotent
+
+
+# --------------------------------------------------------------------------- #
+#  engine shedding (bounded deferral TTL + pool-too-small)
+# --------------------------------------------------------------------------- #
+
+def test_can_ever_admit():
+    kv = PagedKVCache(_cfg(n_layers=2), batch=2, ctx=64, n_pages=6,
+                      page_tokens=8, offload=False)
+    assert kv.can_ever_admit(8, 8)           # 3 pages vs 5 usable
+    assert not kv.can_ever_admit(30, 4)      # 6 pages: never fits
+    assert not kv.can_ever_admit(60, 60)     # exceeds ctx
+    kv.close()
+
+
+def test_engine_sheds_request_pool_can_never_hold():
+    cfg = _cfg(n_layers=2)
+    params = init_params(cfg, KEY)
+    eng, kv = make_paged_engine(params, cfg, 2, 64, n_pages=6,
+                                page_tokens=8, offload=False)
+    rng = np.random.default_rng(5)
+    reqs = [_Req(0, rng.integers(0, cfg.vocab, 8), 8),     # fits
+            _Req(1, rng.integers(0, cfg.vocab, 30), 4)]    # never fits
+    try:
+        fin, _ = eng.run(kv.init_cache(), reqs)
+        assert [f.uid for f in fin] == [0]
+        assert len(fin[0].tokens) == 8
+        assert [r.uid for r in eng.rejected] == [1]
+        assert "pool too small for request 1" in eng.rejected[0].reason
+        kv.pool.check()
+    finally:
+        kv.close()
+
+
+def test_engine_admit_ttl_sheds_starved_request():
+    """A request that *could* fit an empty pool but is starved by a
+    long-running occupant is shed after admit_patience refused steps —
+    bounded deferral, not an unbounded spin."""
+    cfg = _cfg(n_layers=2)
+    params = init_params(cfg, KEY)
+    eng, kv = make_paged_engine(params, cfg, 2, 64, n_pages=9,
+                                page_tokens=8, offload=False)
+    rng = np.random.default_rng(6)
+    reqs = [_Req(0, rng.integers(0, cfg.vocab, 8), 40),    # hog: 7 pages
+            _Req(1, rng.integers(0, cfg.vocab, 8), 8)]     # needs 3 more
+    try:
+        fin, _ = eng.run(kv.init_cache(), reqs, admit_patience=5)
+        assert [f.uid for f in fin] == [0]
+        assert len(fin[0].tokens) == 40      # the hog still completes
+        assert [r.uid for r in eng.rejected] == [1]
+        assert "pool too small for request 1" in eng.rejected[0].reason
+        assert "deferred 5 consecutive steps" in eng.rejected[0].reason
+        kv.pool.check()
+    finally:
+        kv.close()
+
+
+def test_engine_still_raises_when_nothing_can_free(store_dir):
+    """The raise-when-idle contract is preserved: a lone oversized
+    request with no active slots propagates PoolExhausted."""
+    from repro.runtime.kvcache import PoolExhausted
+
+    cfg = _cfg(n_layers=2)
+    params = init_params(cfg, KEY)
+    eng, kv = make_paged_engine(params, cfg, 2, 64, n_pages=4,
+                                page_tokens=8, offload=False)
+    try:
+        with pytest.raises(PoolExhausted, match="exhausted"):
+            eng.run(kv.init_cache(),
+                    [_Req(0, np.arange(30) % cfg.vocab, 4)])
+    finally:
+        kv.close()
+
+
+def test_dense_engine_unaffected_by_shedding_path():
+    cfg = _cfg(n_layers=2)
+    params = init_params(cfg, KEY)
+    eng = make_dense_engine(params, cfg, 2, 64)
+    rng = np.random.default_rng(7)
+    reqs = [_Req(i, rng.integers(0, cfg.vocab, 6), 4) for i in range(3)]
+    fin, _ = eng.run(init_cache(cfg, 2, 64, dtype=jnp.float32), reqs)
+    assert sorted(f.uid for f in fin) == [0, 1, 2]
+    assert eng.rejected == []
