@@ -16,7 +16,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 SECTIONS = ("table3", "table4", "table6", "fig2", "fig8", "halda",
             "kernels", "spec_decode", "streaming", "streaming_q4",
-            "paged_kv", "fault_recovery", "roofline")
+            "paged_kv", "fault_recovery", "observability", "roofline")
 
 
 def _run_section(name: str, fn) -> None:
@@ -68,6 +68,9 @@ def main(argv=None) -> int:
     if "fault_recovery" in wanted:
         from . import fault_recovery
         _run_section("fault_recovery", fault_recovery.main)
+    if "observability" in wanted:
+        from . import observability
+        _run_section("observability", observability.main)
     if "roofline" in wanted:
         from . import roofline
         try:

@@ -641,6 +641,120 @@ def streaming_crosscheck(dev: DeviceProfile, layer_bytes: float,
         ratio=measured / max(predicted, 1e-12))
 
 
+@dataclasses.dataclass(frozen=True)
+class TermDrift:
+    """One latency-model term vs its observed per-token counterpart."""
+
+    term: str            # "disk" | "compute" | "comms"
+    modeled_s: float     # seconds/token the Halda model charges
+    measured_s: float    # seconds/token observed by the tracer
+
+    @property
+    def ratio(self) -> float:
+        return self.measured_s / max(self.modeled_s, 1e-12)
+
+    @property
+    def consistent(self) -> bool:
+        """Same order-of-magnitude budget as :class:`StreamingCheck` —
+        the model is a scheduler input, not a simulator."""
+        return 0.1 <= self.ratio <= 10.0
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftReport:
+    """Modeled-vs-measured drift across the latency model's terms.
+
+    This is the signal an online Halda re-solve consumes (ROADMAP
+    item 4): when a term's observed cost drifts outside its consistency
+    band, the profile coefficient it came from no longer describes the
+    hardware and the placement deserves a re-plan.
+    """
+
+    terms: Tuple[TermDrift, ...]
+    tokens: int                    # token steps the measurement averages
+
+    def term(self, name: str) -> Optional[TermDrift]:
+        for t in self.terms:
+            if t.term == name:
+                return t
+        return None
+
+    @property
+    def drifted(self) -> Tuple[str, ...]:
+        return tuple(t.term for t in self.terms if not t.consistent)
+
+    @property
+    def consistent(self) -> bool:
+        return not self.drifted
+
+    def as_dict(self) -> Dict[str, Dict[str, float]]:
+        return {t.term: {"modeled_s": t.modeled_s,
+                         "measured_s": t.measured_s,
+                         "ratio": t.ratio,
+                         "consistent": t.consistent}
+                for t in self.terms}
+
+    def report(self) -> str:
+        lines = [f"drift report over {self.tokens} token(s):"]
+        for t in self.terms:
+            flag = "ok" if t.consistent else "DRIFT"
+            lines.append(
+                f"  {t.term:8s} modeled {t.modeled_s * 1e3:8.3f} ms/tok  "
+                f"measured {t.measured_s * 1e3:8.3f} ms/tok  "
+                f"ratio {t.ratio:6.2f}  [{flag}]")
+        return "\n".join(lines)
+
+
+def telemetry_crosscheck(dev: DeviceProfile, layer_bytes: float,
+                         n_layers: int, *, stalls: Sequence = (),
+                         prefetch_events: Sequence = (),
+                         model: Optional[ModelProfile] = None,
+                         n_hops: int = 0) -> DriftReport:
+    """Compare a traced run's per-token splits against the model's terms.
+
+    The unified tracer (``runtime.telemetry``) measures where each
+    token's milliseconds actually went; the Halda objective *predicts*
+    them from profile coefficients. This closes the loop per term:
+
+      * **disk** — modeled ``n_layers * layer_bytes / disk_speed`` per
+        streamed pass vs the prefetch timeline's total read time per
+        token (``prefetch_events``; background reads, so overlap does
+        not hide them the way exposed ``disk_wait`` would).
+      * **compute** — ``device_coeffs(dev, model).alpha * n_layers``
+        vs the mean ``compute`` split of the stall records (needs
+        ``model``; skipped otherwise).
+      * **comms** — ``dev.t_comm * n_hops`` vs the mean ``comms`` split
+        (skipped when ``n_hops`` is 0).
+
+    ``stalls`` is a sequence of ``runtime.telemetry.StallRecord``;
+    ``prefetch_events`` a ``PrefetchEvent`` timeline. Terms without
+    both a model value and a measurement are omitted rather than
+    reported as spuriously drifted.
+    """
+    stalls = list(stalls)
+    tokens = max(len(stalls), 1)
+    terms: List[TermDrift] = []
+
+    if prefetch_events:
+        modeled_disk = n_layers * streaming_disk_term(dev, layer_bytes)
+        measured_disk = sum(e.duration for e in prefetch_events
+                            if e.nbytes > 0) / tokens
+        terms.append(TermDrift("disk", modeled_disk, measured_disk))
+
+    if model is not None and stalls:
+        alpha = device_coeffs(dev, model).alpha
+        measured_comp = sum(s.compute_s for s in stalls) / tokens
+        terms.append(TermDrift("compute", alpha * n_layers,
+                               measured_comp))
+
+    if n_hops > 0 and stalls:
+        measured_comms = sum(s.comms_s for s in stalls) / tokens
+        terms.append(TermDrift("comms", dev.t_comm * n_hops,
+                               measured_comms))
+
+    return DriftReport(terms=tuple(terms), tokens=len(stalls))
+
+
 def ttft(devices: Sequence[DeviceProfile], model: ModelProfile,
          w: Sequence[int], n: Sequence[int], prompt_len: int = 16) -> float:
     """Time-to-first-token: prefill modelled as one pass whose compute and

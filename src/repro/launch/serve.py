@@ -78,7 +78,19 @@ def main(argv=None) -> int:
                          "on the same requests; fails on any token "
                          "mismatch and reports KV high-water vs the "
                          "dense envelope")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="capture a unified runtime trace (spans from "
+                         "prefetchers, offloader, decode steps, faults, "
+                         "failovers) and write Chrome-trace JSON here — "
+                         "open it at https://ui.perfetto.dev")
+    ap.add_argument("--metrics-interval", type=int, default=0,
+                    metavar="N",
+                    help="with --trace: print a stall-attribution "
+                         "summary line every N decode tokens")
     args = ap.parse_args(argv)
+
+    from ..runtime.telemetry import NULL_TRACER, Tracer
+    tracer = Tracer() if args.trace else NULL_TRACER
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -127,10 +139,15 @@ def main(argv=None) -> int:
         out_tokens = [nxt]
         t0 = time.time()
         for t in range(args.new_tokens):
-            logits, cache = step(nxt, ln, pr, cache)
-            ln = ln + 1
-            nxt = jnp.argmax(logits[:, 0, :cfg.vocab], -1)[:, None]
+            with tracer.token_step(t, track="decode"):
+                with tracer.phase("compute"):
+                    logits, cache = step(nxt, ln, pr, cache)
+                    ln = ln + 1
+                    nxt = jnp.argmax(logits[:, 0, :cfg.vocab],
+                                     -1)[:, None]
+                    nxt = jax.block_until_ready(nxt)
             out_tokens.append(nxt)
+            _metrics_tick(tracer, args, t)
         dt = time.time() - t0
         print(f"ring decode (k={plan.k}, w={plan.w}, M={stages}, TP={tp}): "
               f"{args.new_tokens} tokens × {B} seqs in {dt:.2f}s "
@@ -165,22 +182,44 @@ def main(argv=None) -> int:
     if args.stream_window > 0 and cfg.family in ("dense", "moe", "vlm",
                                                  "ssm"):
         _stream_smoke(cfg, params, prompts, args,
-                      ring_ctx=(mesh, stages, tp) if ring else None)
+                      ring_ctx=(mesh, stages, tp) if ring else None,
+                      tracer=tracer)
     if args.paged_kv:
         if cfg.family not in ("dense", "moe", "vlm"):
             print(f"paged-kv: unsupported family {cfg.family} — skipped")
         elif cfg.kv_dtype == "int8":
             print("paged-kv: int8 KV quantization not paged yet — skipped")
         else:
-            _paged_smoke(cfg, params, args)
+            _paged_smoke(cfg, params, args, tracer=tracer)
     if args.chaos != "none":
         if cfg.family not in ("dense", "moe", "vlm", "ssm"):
             print(f"chaos: unsupported family {cfg.family} — skipped")
         else:
             _chaos_smoke(cfg, params, prompts, args,
-                         ring_ctx=(mesh, stages, tp) if ring else None)
+                         ring_ctx=(mesh, stages, tp) if ring else None,
+                         tracer=tracer)
     print("sample token ids:", np.asarray(nxt).ravel()[:8].tolist())
+    if args.trace:
+        from ..runtime.telemetry import format_summary
+        tracer.export_chrome_trace(args.trace)
+        summ = tracer.summary()
+        if summ.get("n"):
+            print("stall attribution:", format_summary(summ))
+        print(f"trace: {len(tracer.events())} events on "
+              f"{len(tracer.tracks())} tracks -> {args.trace} "
+              f"(open at https://ui.perfetto.dev)")
     return 0
+
+
+def _metrics_tick(tracer, args, t: int) -> None:
+    """Print a periodic stall-attribution line (--metrics-interval)."""
+    n = args.metrics_interval
+    if not args.trace or n <= 0 or (t + 1) % n != 0:
+        return
+    from ..runtime.telemetry import format_summary
+    summ = tracer.summary(last_n=n)
+    if summ.get("n"):
+        print(f"[token {t + 1}] {format_summary(summ)}")
 
 
 def _io_policy(args):
@@ -193,7 +232,8 @@ def _io_policy(args):
                     get_timeout_s=2 * args.io_deadline_s)
 
 
-def _chaos_smoke(cfg, params, prompts, args, *, ring_ctx=None) -> None:
+def _chaos_smoke(cfg, params, prompts, args, *, ring_ctx=None,
+                 tracer=None) -> None:
     """Fault-injection smoke: recovery is the pass criterion."""
     import shutil
     import tempfile
@@ -270,11 +310,12 @@ def _chaos_smoke(cfg, params, prompts, args, *, ring_ctx=None) -> None:
 
             inj = FaultInjector([FaultSpec(
                 op="layer_read", mode="stage_failure", stage=1,
-                after=counting.reads, times=1)])
+                after=counting.reads, times=1)], tracer=tracer)
             store = FaultyStore(ParamStore(sdir), inj)
             srv = ElasticRingServer(cfg, store, params, batch=B,
                                     ctx=args.ctx, n_stages=stages,
-                                    tp=tp, k=args.ring_k, policy=policy)
+                                    tp=tp, k=args.ring_k, policy=policy,
+                                    tracer=tracer)
             try:
                 toks = srv.generate(np.asarray(prompts, np.int32),
                                     args.new_tokens)
@@ -300,7 +341,7 @@ def _chaos_smoke(cfg, params, prompts, args, *, ring_ctx=None) -> None:
         shutil.rmtree(sdir, ignore_errors=True)
 
 
-def _paged_smoke(cfg, params, args) -> None:
+def _paged_smoke(cfg, params, args, *, tracer=None) -> None:
     """Paged-KV parity smoke: dense vs paged continuous batching."""
     import jax.numpy as jnp
 
@@ -323,7 +364,7 @@ def _paged_smoke(cfg, params, args) -> None:
     page_tokens = 8
     n_pages = 2 + B * (-(-ctx // page_tokens))
     eng_p, kv = make_paged_engine(params, cfg, B, ctx, n_pages=n_pages,
-                                  page_tokens=page_tokens)
+                                  page_tokens=page_tokens, tracer=tracer)
     t0 = time.time()
     fin_p, _ = eng_p.run(kv.init_cache(), reqs)
     t_paged = time.time() - t0
@@ -345,7 +386,8 @@ def _paged_smoke(cfg, params, args) -> None:
           f"evictions {st.evictions}")
 
 
-def _stream_smoke(cfg, params, prompts, args, *, ring_ctx=None) -> None:
+def _stream_smoke(cfg, params, prompts, args, *, ring_ctx=None,
+                  tracer=None) -> None:
     """Weight-streaming decode: layer store + prefetcher (+ streamed ring)."""
     import shutil
     import tempfile
@@ -382,15 +424,24 @@ def _stream_smoke(cfg, params, prompts, args, *, ring_ctx=None) -> None:
                   f"({probe.layer_nbytes / raw:.2f}x)")
         probe.close()
 
+        from ..runtime.telemetry import NULL_TRACER
+        tracer = tracer or NULL_TRACER
         with StreamingParamSource(ParamStore(sdir), window=W,
-                                  policy=_io_policy(args)) as src:
+                                  policy=_io_policy(args),
+                                  tracer=tracer) as src:
             c_s = init_cache(cfg, B, args.ctx, dtype=jnp.float32)
             lg, c_s = prefill(params, cfg, prompts, c_s)
             tok = jnp.argmax(lg[:, -1], -1)[:, None]
             t0 = time.time()
-            for _ in range(args.new_tokens):
-                lg, c_s = decode_step_layerwise(src, cfg, c_s, tok)
-                tok = jnp.argmax(lg[:, 0], -1)[:, None]
+            for t in range(args.new_tokens):
+                with tracer.token_step(t, track="decode",
+                                       name=f"stream_token[{t}]"):
+                    with tracer.phase("compute"):
+                        lg, c_s = decode_step_layerwise(src, cfg, c_s,
+                                                        tok)
+                        tok = jnp.argmax(lg[:, 0], -1)[:, None]
+                        tok = _jax.block_until_ready(tok)
+                _metrics_tick(tracer, args, t)
             dt = time.time() - t0
             st = src.stats()
         label = "" if args.store_quant == "none" \
@@ -414,7 +465,7 @@ def _stream_smoke(cfg, params, prompts, args, *, ring_ctx=None) -> None:
                 cfg, mesh, plan, ParamStore(sdir), head_params=head,
                 cache_like=c_r,
                 prefetch_depth=max(1, W // max(plan.w, 1)),
-                policy=_io_policy(args))
+                policy=_io_policy(args), tracer=tracer)
             ln = c_r["len"]
             tok = jnp.zeros((B, 1), jnp.int32)
             t0 = time.time()

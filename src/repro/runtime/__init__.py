@@ -1,2 +1,3 @@
 from . import (checkpoint, elastic, failover, faults, iopolicy, kvcache,
-               optim, paramstore, serve, sharding, streaming, train)  # noqa
+               optim, paramstore, serve, sharding, streaming, telemetry,
+               train)  # noqa

@@ -25,6 +25,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .telemetry import NULL_TRACER
+
 
 @dataclasses.dataclass
 class SlotState:
@@ -99,7 +101,7 @@ class ContinuousBatcher:
     def __init__(self, batch: int, prefill_one: Callable,
                  write_slot: Callable, decode: Callable,
                  *, eos_id: Optional[int] = None, spec=None, source=None,
-                 ctx: Optional[int] = None, kv=None):
+                 ctx: Optional[int] = None, kv=None, tracer=None):
         self.B = batch
         self.prefill_one = prefill_one
         self.write_slot = write_slot
@@ -109,9 +111,15 @@ class ContinuousBatcher:
         self.source = source
         self.ctx = ctx
         self.kv = kv
+        self.tracer = tracer or NULL_TRACER
         self.slots = [SlotState() for _ in range(batch)]
         self.finished: List[FinishedRequest] = []
         self.rejected: List[RejectedRequest] = []
+        self._step_idx = 0
+
+    def telemetry(self):
+        """The attached tracer (NULL_TRACER when tracing is off)."""
+        return self.tracer
 
     def streaming_stats(self):
         """Prefetch statistics of the attached streaming source (or None)."""
@@ -187,17 +195,31 @@ class ContinuousBatcher:
         return self.kv.stats() if self.kv is not None else None
 
     def step(self, cache, tokens: jnp.ndarray):
-        """One decode step for every occupied slot."""
-        if self.spec is not None:
-            return self._spec_step(cache, tokens)
+        """One decode step for every occupied slot.
+
+        Each step is one token-step scope on the tracer: the decode +
+        argmax (host-synced) charge to ``compute``, stalls inside the
+        decode callable (prefetcher waits, KV fetches) attribute to
+        their own components, and the remainder books as scheduler
+        idle. Token-step records partition measured TPOT.
+        """
+        with self.tracer.token_step(self._step_idx, track="decode"):
+            self._step_idx += 1
+            if self.spec is not None:
+                return self._spec_step(cache, tokens)
+            return self._vanilla_step(cache, tokens)
+
+    def _vanilla_step(self, cache, tokens: jnp.ndarray):
         if self.kv is not None:
             cache = self.kv.begin_step(cache, self.active(), 1)
-        logits, cache = self.decode(cache, tokens)
-        nxt = jnp.argmax(logits[:, 0], axis=-1)          # greedy
+        with self.tracer.phase("compute", track="decode"):
+            logits, cache = self.decode(cache, tokens)
+            nxt = jnp.argmax(logits[:, 0], axis=-1)      # greedy
+            nxt_host = np.asarray(nxt)                   # force the sync
         tokens = nxt[:, None].astype(tokens.dtype)
         for i in self.active():
             st = self.slots[i]
-            tok = int(nxt[i])
+            tok = int(nxt_host[i])
             if self.kv is not None:
                 self.kv.advance(i)
             st.generated.append(tok)
@@ -217,11 +239,15 @@ class ContinuousBatcher:
             cache = self.kv.begin_step(cache, self.active(),
                                        self.spec.gamma + 1)
             len0 = {i: self.kv.length(i) for i in self.active()}
-        cache, res = self.spec.cycle(cache, tokens, active=self.active())
+        with self.tracer.phase("compute", track="decode"):
+            cache, res = self.spec.cycle(cache, tokens,
+                                         active=self.active())
+            n_emit_host = np.asarray(res.n_emit)         # force the sync
         tokens = res.next_tokens.astype(tokens.dtype)
+        accepted = proposed = 0
         for i in self.active():
             st = self.slots[i]
-            n = int(res.n_emit[i])
+            n = int(n_emit_host[i])
             if self.kv is not None:
                 # pages past the accepted length return to the pool — the
                 # allocator half of the rollback (len was already reset)
@@ -232,6 +258,8 @@ class ContinuousBatcher:
             # agreement sample.
             st.proposed += self.spec.gamma
             st.accepted += n - 1
+            proposed += self.spec.gamma
+            accepted += n - 1
             for tok in res.emitted[i, :n]:
                 tok = int(tok)
                 st.generated.append(tok)
@@ -240,6 +268,9 @@ class ContinuousBatcher:
                                          and tok == self.eos_id):
                     self._finish(i)
                     break
+        if proposed:
+            self.tracer.counter("spec/proposed", proposed, track="decode")
+            self.tracer.counter("spec/accepted", accepted, track="decode")
         return cache, tokens
 
     def run(self, cache, requests, *, max_steps: int = 10_000,
@@ -265,9 +296,11 @@ class ContinuousBatcher:
             while pending and self.free_slots():
                 req = pending.pop(0)
                 try:
-                    cache, tokens = self.admit(cache, tokens, req.uid,
-                                               req.prompt,
-                                               req.max_new_tokens)
+                    with self.tracer.span(f"admit[{req.uid}]", cat="sched",
+                                          track="decode", uid=req.uid):
+                        cache, tokens = self.admit(cache, tokens, req.uid,
+                                                   req.prompt,
+                                                   req.max_new_tokens)
                     deferrals.pop(req.uid, None)
                 except PoolExhausted as e:
                     if not self.active():
@@ -283,6 +316,10 @@ class ContinuousBatcher:
                             uid=req.uid,
                             reason=f"pool too small for request "
                                    f"{req.uid}: {e}"))
+                        self.tracer.instant(f"reject[{req.uid}]",
+                                            cat="sched", track="decode",
+                                            uid=req.uid,
+                                            reason="pool too small")
                         continue
                     n = deferrals.get(req.uid, 0) + 1
                     if n > admit_patience:
@@ -293,6 +330,10 @@ class ContinuousBatcher:
                                    f"{req.uid}: admission deferred "
                                    f"{n - 1} consecutive steps without "
                                    f"a slot freeing enough pages ({e})"))
+                        self.tracer.instant(f"reject[{req.uid}]",
+                                            cat="sched", track="decode",
+                                            uid=req.uid,
+                                            reason="admit starved")
                         continue
                     deferrals[req.uid] = n
                     pending.insert(0, req)
@@ -305,7 +346,8 @@ class ContinuousBatcher:
 
 def make_dense_engine(params, cfg, batch: int, ctx: int, *,
                       eos_id: Optional[int] = None, spec=None,
-                      cache_dtype=jnp.float32) -> ContinuousBatcher:
+                      cache_dtype=jnp.float32,
+                      tracer=None) -> ContinuousBatcher:
     """Reference dense-cache engine wiring (prefill-one / slot-write /
     decode over ``models.decode_step``) — the single source of the
     slot-write convention, shared by the serving driver, benchmarks and
@@ -332,4 +374,5 @@ def make_dense_engine(params, cfg, batch: int, ctx: int, *,
         return M.decode_step(params, cfg, cache, tokens)
 
     return ContinuousBatcher(batch, prefill_one, write_slot, decode,
-                             eos_id=eos_id, spec=spec, ctx=ctx)
+                             eos_id=eos_id, spec=spec, ctx=ctx,
+                             tracer=tracer)

@@ -34,7 +34,6 @@ from __future__ import annotations
 
 import dataclasses
 import logging
-import time
 from typing import Any, Dict, List, Optional, Sequence
 
 import jax
@@ -45,6 +44,7 @@ from . import elastic
 from . import serve as RS
 from .iopolicy import IOPolicy, StageFailure, find_cause
 from .streaming import StreamingRingDriver
+from .telemetry import NULL_TRACER, clock
 
 Params = Dict[str, Any]
 
@@ -95,7 +95,7 @@ class ElasticRingServer:
                  prefetch_depth: int = 2, max_failovers: int = 2,
                  policy: Optional[IOPolicy] = None,
                  device_profiles: Optional[Sequence] = None,
-                 model_profile=None):
+                 model_profile=None, tracer=None):
         if not RS.ring_supported(cfg, batch, n_stages):
             raise ValueError(
                 f"ring unsupported: family {cfg.family}, "
@@ -108,6 +108,7 @@ class ElasticRingServer:
         self.prefetch_depth = prefetch_depth
         self.max_failovers = max_failovers
         self.policy = policy or IOPolicy()
+        self.tracer = tracer or NULL_TRACER
         self.device_profiles = list(device_profiles) \
             if device_profiles is not None else None
         self.model_profile = model_profile
@@ -160,7 +161,8 @@ class ElasticRingServer:
         driver = StreamingRingDriver(
             self.cfg, mesh, self.state.plan, self.store,
             head_params=self._head, cache_like=cache,
-            prefetch_depth=self.prefetch_depth, policy=self.policy)
+            prefetch_depth=self.prefetch_depth, policy=self.policy,
+            tracer=self.tracer)
         self.mesh, self.driver = mesh, driver
         return driver, cache
 
@@ -171,9 +173,9 @@ class ElasticRingServer:
         """Classify ``exc``, update the elastic state, record the event
         timing skeleton (completed by the caller after rebuild+replay)."""
         cause = find_cause(exc, StageFailure)
-        detect_s = time.perf_counter() - t_detect0
+        detect_s = clock() - t_detect0
         before = len(self.state.stages)
-        t0 = time.perf_counter()
+        t0 = clock()
         failed_id: Optional[int] = None
         halda_info: Optional[Dict[str, Any]] = None
         if cause is not None and 0 <= cause.stage < before:
@@ -205,7 +207,7 @@ class ElasticRingServer:
             # poisoned jit buffer — not a dead host)
             log.warning("unattributed ring failure at token %d: %s",
                         n_emitted, exc)
-        resolve_s = time.perf_counter() - t0
+        resolve_s = clock() - t0
         self._pending_event = dict(
             token_index=n_emitted, failed_stage=failed_id,
             generation=self.state.generation,
@@ -245,18 +247,23 @@ class ElasticRingServer:
         while len(emitted) < max_new:
             try:
                 if driver is None:
-                    t_b0 = time.perf_counter()
+                    t_b0 = clock()
                     driver, cache = self._build()
-                    rebuild_s = time.perf_counter() - t_b0
-                    t_r0 = time.perf_counter()
+                    rebuild_s = clock() - t_b0
+                    t_r0 = clock()
                     cache, ln, nxt = self._replay(driver, cache, history)
-                    replay_s = time.perf_counter() - t_r0
+                    replay_s = clock() - t_r0
                     ev = getattr(self, "_pending_event", None)
                     if ev is not None:
-                        self.events.append(FailoverEvent(
+                        fe = FailoverEvent(
                             **ev, rebuild_s=rebuild_s, replay_s=replay_s,
                             tokens_lost=0,
-                            replayed_tokens=len(history)))
+                            replayed_tokens=len(history))
+                        self.events.append(fe)
+                        # recovery splits land on the shared timeline as
+                        # back-to-back spans ending now
+                        self.tracer.ingest_failover_event(fe,
+                                                          t_end=clock())
                         self._pending_event = None
                 while len(emitted) < max_new:
                     emitted.append(nxt)
@@ -273,7 +280,11 @@ class ElasticRingServer:
             except (KeyboardInterrupt, SystemExit):
                 raise
             except Exception as exc:
-                t_caught = time.perf_counter()
+                t_caught = clock()
+                self.tracer.instant("stage_failure", cat="failover",
+                                    track="failover",
+                                    token_index=len(emitted),
+                                    error=type(exc).__name__)
                 failovers += 1
                 if failovers > self.max_failovers:
                     raise

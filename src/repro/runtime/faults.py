@@ -38,6 +38,7 @@ import time
 from typing import Any, List, Optional, Sequence, Tuple, Type
 
 from .iopolicy import ShortReadError, StageFailure
+from .telemetry import NULL_TRACER, clock
 
 OP_KINDS = ("layer_read", "kv_h2d", "kv_d2h")
 MODES = ("error", "short_read", "delay", "stall", "stage_failure")
@@ -87,7 +88,7 @@ class FiredFault:
     key: Any
     mode: str
     call_index: int          # per-(spec) matching-call counter at firing
-    t: float                 # perf_counter timestamp
+    t: float                 # shared telemetry-clock timestamp
 
 
 class FaultInjector:
@@ -95,12 +96,17 @@ class FaultInjector:
 
     ``check(op, key)`` is called by instrumented I/O paths; it consults
     every spec (so overlapping schedules compose) and fires the first
-    one whose window and seeded coin match. ``fired`` records firings.
+    one whose window and seeded coin match. ``fired`` records firings on
+    the shared telemetry clock (so the audit trail lands on the same
+    timeline as prefetch spans and health records); an attached
+    ``tracer`` additionally gets a live instant event per firing.
     """
 
-    def __init__(self, schedule: Sequence[FaultSpec], *, seed: int = 0):
+    def __init__(self, schedule: Sequence[FaultSpec], *, seed: int = 0,
+                 tracer=None):
         self.schedule = list(schedule)
         self.seed = seed
+        self.tracer = tracer or NULL_TRACER
         self.fired: List[FiredFault] = []
         self._lock = threading.Lock()
         self._seen: List[int] = [0] * len(self.schedule)   # matching calls
@@ -145,11 +151,13 @@ class FaultInjector:
                     self._shot[idx] += 1
                     self.fired.append(FiredFault(
                         op=op, key=key, mode=spec.mode, call_index=seen,
-                        t=time.perf_counter()))
+                        t=clock()))
                     to_fire = (spec, seen)
         if to_fire is None:
             return
         spec, seen = to_fire
+        self.tracer.instant(f"fault:{spec.mode}:{op}", cat="fault",
+                            track="faults", key=key, call_index=seen)
         self._raise(spec, op, key, seen)
 
     def _raise(self, spec: FaultSpec, op: str, key: Any, seen: int) -> None:

@@ -33,6 +33,8 @@ import random
 import time
 from typing import Callable, Optional, Type, TypeVar
 
+from .telemetry import clock
+
 T = TypeVar("T")
 
 
@@ -111,7 +113,9 @@ class WorkerHealth:
     Written by the worker (under its condition lock or from the single
     worker thread), read by ``get()`` timeouts, ``stats()``, and stall
     reports. Plain attributes — torn reads of a float timestamp are
-    harmless for a health display.
+    harmless for a health display. ``last_progress_t`` is stamped on the
+    shared :func:`runtime.telemetry.clock`, so health records merge onto
+    the same timeline as prefetch events and fault audit trails.
     """
 
     name: str = ""
@@ -119,14 +123,13 @@ class WorkerHealth:
     failures: int = 0                 # every failed attempt
     retries: int = 0                  # failed attempts that were retried
     last_error: Optional[str] = None
-    last_progress_t: float = dataclasses.field(
-        default_factory=time.monotonic)
+    last_progress_t: float = dataclasses.field(default_factory=clock)
     stalled: bool = False
     closed: bool = False
 
     def progress(self) -> None:
         self.consecutive_failures = 0
-        self.last_progress_t = time.monotonic()
+        self.last_progress_t = clock()
 
     def failure(self, exc: BaseException) -> None:
         self.failures += 1
@@ -134,7 +137,7 @@ class WorkerHealth:
         self.last_error = f"{type(exc).__name__}: {exc}"
 
     def seconds_since_progress(self) -> float:
-        return time.monotonic() - self.last_progress_t
+        return clock() - self.last_progress_t
 
     def report(self) -> str:
         state = "stalled" if self.stalled else (
@@ -209,7 +212,7 @@ class IOPolicy:
         error is chained as ``__cause__``.
         """
         rng = random.Random((self.seed << 20) ^ (hash(op) & 0xFFFFF))
-        deadline = time.monotonic() + self.op_deadline_s
+        deadline = clock() + self.op_deadline_s
         attempt = 0
         while True:
             try:
@@ -231,7 +234,7 @@ class IOPolicy:
                         f"({self.max_retries} retries): "
                         f"{type(e).__name__}: {e}",
                         op=op, attempts=attempt) from e
-                now = time.monotonic()
+                now = clock()
                 if now >= deadline:
                     raise StallTimeout(
                         f"{op}: deadline {self.op_deadline_s:.1f}s exceeded "

@@ -47,7 +47,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from .iopolicy import IOPolicy, StallTimeout, WorkerHealth
-from .streaming import PrefetchEvent
+from .streaming import PrefetchEvent, PrefetchStats
+from .telemetry import NULL_TRACER, clock
 
 log = logging.getLogger(__name__)
 
@@ -238,10 +239,12 @@ class BlockOffloader:
     """
 
     def __init__(self, *, policy: Optional[IOPolicy] = None,
-                 injector=None) -> None:
+                 injector=None, tracer=None) -> None:
         self.policy = policy or IOPolicy()
         self.injector = injector          # faults.FaultInjector or None
+        self.tracer = tracer or NULL_TRACER
         self.health = WorkerHealth(name="BlockOffloader")
+        self.stall_s = 0.0                # get() blocked on a staging fetch
         self._host: Dict[int, Params] = {}                # hash -> np tree
         self._staged: Dict[int, Params] = {}              # hash -> jnp tree
         self._queue: List[int] = []
@@ -273,11 +276,11 @@ class BlockOffloader:
             if tree is None:
                 continue
             try:
-                t0 = time.perf_counter()
+                t0 = clock()
                 staged = self.policy.run("kv_h2d",
                                          lambda: self._h2d(tree),
                                          health=self.health)
-                t1 = time.perf_counter()
+                t1 = clock()
             except (KeyboardInterrupt, SystemExit):
                 # control flow: unblock waiters, then die loudly
                 with self._cv:
@@ -292,6 +295,8 @@ class BlockOffloader:
                 return
             nbytes = sum(np.asarray(a).nbytes
                          for a in jax.tree.leaves(tree))
+            self.tracer.span_event(f"kv_h2d[{h}]", t0, t1, cat="kv",
+                                   track="kv-offloader", nbytes=nbytes)
             with self._cv:
                 self._staged[h] = staged
                 self.events.append(PrefetchEvent(0, t0, t1, nbytes))
@@ -310,7 +315,10 @@ class BlockOffloader:
         # the D2H copy happened in the eviction callback; this commits the
         # host store (and is where an injected kv_d2h fault surfaces) —
         # transient faults retry under the shared policy
+        t0 = clock()
         nbytes = self.policy.run("kv_d2h", put, health=self.health)
+        self.tracer.span_event(f"kv_d2h[{h}]", t0, clock(), cat="kv",
+                               track="kv-offloader", nbytes=nbytes)
         with self._cv:
             self._host[h] = tree
             self.offloaded_bytes += nbytes
@@ -331,28 +339,46 @@ class BlockOffloader:
     def get(self, h: int, *, timeout: Optional[float] = None) -> Params:
         if timeout is None:
             timeout = self.policy.get_timeout_s
-        deadline = time.monotonic() + timeout
+        t_enter = clock()
+        deadline = t_enter + timeout
+        with self.tracer.phase("h2d", cat="kv", track="decode",
+                               min_dur=2e-4, label=f"kv_wait[{h}]"):
+            with self._cv:
+                while h not in self._staged:
+                    if self._error is not None:
+                        raise RuntimeError(
+                            f"offload fetch of page hash {h} failed "
+                            f"({self.health.report()})") from self._error
+                    if self._stop:
+                        raise RuntimeError(
+                            "offloader stopped" + (
+                                " (worker interrupted)"
+                                if self._interrupted else ""))
+                    remaining = deadline - clock()
+                    if remaining <= 0:
+                        self.health.stalled = True
+                        raise StallTimeout(
+                            f"offloaded page not staged within "
+                            f"{timeout:.1f}s "
+                            f"({self.health.report()})", op="kv_h2d")
+                    self._cv.wait(min(remaining, 0.25))
+                staged = self._staged.pop(h)
+                self._host.pop(h, None)  # back on device; host copy done
+                self.stall_s += clock() - t_enter
+                return staged
+
+    def stats(self) -> PrefetchStats:
+        """Uniform ``PrefetchStats`` view — the same surface the layer
+        and ring-bank prefetchers expose, so stall/retry counters from
+        all three staging paths read identically in reports."""
         with self._cv:
-            while h not in self._staged:
-                if self._error is not None:
-                    raise RuntimeError(
-                        f"offload fetch of page hash {h} failed "
-                        f"({self.health.report()})") from self._error
-                if self._stop:
-                    raise RuntimeError(
-                        "offloader stopped" + (
-                            " (worker interrupted)" if self._interrupted
-                            else ""))
-                remaining = deadline - time.monotonic()
-                if remaining <= 0:
-                    self.health.stalled = True
-                    raise StallTimeout(
-                        f"offloaded page not staged within {timeout:.1f}s "
-                        f"({self.health.report()})", op="kv_h2d")
-                self._cv.wait(min(remaining, 0.25))
-            staged = self._staged.pop(h)
-            self._host.pop(h, None)    # back on device; host copy done
-            return staged
+            events = list(self.events)
+            fetched = self.fetched_bytes
+        return PrefetchStats(
+            events=events, peak_resident_bytes=0,
+            total_bytes_read=fetched, stall_s=self.stall_s,
+            layers_served=len(events), releases=0,
+            retries=self.health.retries)
 
     def close(self, timeout: float = 5.0) -> bool:
         """Stop the worker (idempotent); True once it has joined, False
@@ -390,6 +416,8 @@ class KVStats:
     offloaded_bytes: int
     fetched_bytes: int
     fetch_events: List[PrefetchEvent]
+    fetch_stall_s: float = 0.0        # admits blocked on a staging fetch
+    fetch_retries: int = 0            # transient I/O retries (IOPolicy)
 
     @property
     def highwater_bytes(self) -> int:
@@ -434,7 +462,8 @@ class PagedKVCache:
     def __init__(self, cfg, *, batch: int, ctx: int, n_pages: int,
                  page_tokens: int = 16, dtype=jnp.float32,
                  offload: bool = True,
-                 io_policy: Optional[IOPolicy] = None, injector=None):
+                 io_policy: Optional[IOPolicy] = None, injector=None,
+                 tracer=None):
         self.cfg = cfg
         self.B = batch
         self.page_tokens = page_tokens
@@ -442,7 +471,8 @@ class PagedKVCache:
         self.ctx = self.max_pages * page_tokens
         self.pool = BlockPool(n_pages, page_tokens)
         self.offloader = BlockOffloader(policy=io_policy,
-                                        injector=injector) \
+                                        injector=injector,
+                                        tracer=tracer) \
             if offload else None
         self._spec = paged_cache_spec(cfg)
         self.dtype = dtype
@@ -504,7 +534,9 @@ class PagedKVCache:
             evictions=self.pool.evictions,
             offloaded_bytes=off.offloaded_bytes if off else 0,
             fetched_bytes=off.fetched_bytes if off else 0,
-            fetch_events=list(off.events) if off else [])
+            fetch_events=list(off.events) if off else [],
+            fetch_stall_s=off.stall_s if off else 0.0,
+            fetch_retries=off.health.retries if off else 0)
 
     # -- page content ops (functional on the cache) ------------------------ #
 
@@ -790,7 +822,7 @@ def make_paged_engine(params, cfg, batch: int, ctx: int, *, n_pages: int,
                       spec=None, offload: bool = True,
                       cache_dtype=jnp.float32,
                       io_policy: Optional[IOPolicy] = None,
-                      injector=None):
+                      injector=None, tracer=None):
     """Build a ``ContinuousBatcher`` over a paged KV cache.
 
     Returns ``(engine, kv)``; drive it with ``engine.run(kv.init_cache(),
@@ -804,7 +836,7 @@ def make_paged_engine(params, cfg, batch: int, ctx: int, *, n_pages: int,
     kv = PagedKVCache(cfg, batch=batch, ctx=ctx, n_pages=n_pages,
                       page_tokens=page_tokens, dtype=cache_dtype,
                       offload=offload, io_policy=io_policy,
-                      injector=injector)
+                      injector=injector, tracer=tracer)
 
     def prefill_one(prompt):
         c1 = M.init_cache(cfg, 1, ctx, dtype=cache_dtype)
@@ -818,5 +850,6 @@ def make_paged_engine(params, cfg, batch: int, ctx: int, *, n_pages: int,
         raise RuntimeError("paged engine installs via kv, not write_slot")
 
     eng = ContinuousBatcher(batch, prefill_one, write_slot, decode,
-                            eos_id=eos_id, spec=spec, kv=kv)
+                            eos_id=eos_id, spec=spec, kv=kv,
+                            tracer=tracer)
     return eng, kv

@@ -53,6 +53,7 @@ import numpy as np
 
 from .iopolicy import IOPolicy, StallTimeout, WorkerHealth
 from .paramstore import ParamSource, ParamStore
+from .telemetry import NULL_TRACER, clock
 
 Params = Dict[str, Any]
 
@@ -124,13 +125,14 @@ class LayerPrefetcher:
 
     def __init__(self, store: ParamStore, *, window: int = 4,
                  device_put: bool = True,
-                 policy: Optional[IOPolicy] = None):
+                 policy: Optional[IOPolicy] = None, tracer=None):
         if window < 1:
             raise ValueError("window must be >= 1")
         self.store = store
         self.window = min(window, store.n_layers)
         self.device_put = device_put
         self.policy = policy or IOPolicy()
+        self.tracer = tracer or NULL_TRACER
         self.health = WorkerHealth(name="LayerPrefetcher")
         self._buf: Dict[int, Tuple[Params, int]] = {}   # layer -> (tree, nb)
         self._queue: deque = deque()
@@ -159,17 +161,19 @@ class LayerPrefetcher:
     def _stage(self, i: int) -> Tuple[Params, int, float, float]:
         """Copy layer i out of the mmap into private buffers (+ device)."""
         self.store.willneed(i)
-        t0 = time.perf_counter()
+        t0 = clock()
         views = self.store.layer(i)
         # a real copy, not ascontiguousarray (which aliases contiguous mmap
         # views): staging must be private so the kernel reclaiming mmap
         # pages can never touch data the compute front is about to use
         staged = jax.tree.map(lambda a: np.array(a, copy=True), views)
-        t1 = time.perf_counter()     # event = disk->staging only (the term
+        t1 = clock()                 # event = disk->staging only (the term
         nbytes = sum(a.nbytes for a in jax.tree.leaves(staged))
         if self.device_put:          # the latency model prices as b/s_disk)
             # async H2D: the transfer of layer k+w overlaps compute on k
-            staged = jax.tree.map(jnp.asarray, staged)
+            with self.tracer.span("h2d", cat="prefetch",
+                                  track="prefetcher", layer=i):
+                staged = jax.tree.map(jnp.asarray, staged)
         return staged, nbytes, t0, t1
 
     def _worker(self) -> None:
@@ -201,6 +205,9 @@ class LayerPrefetcher:
                     self._inflight.discard(i)
                     self._cv.notify_all()
                 return
+            self.tracer.span_event(f"layer_read[{i}]", t0, t1,
+                                   cat="prefetch", track="prefetcher",
+                                   nbytes=nbytes)
             with self._cv:
                 self._inflight.discard(i)
                 if i not in self._buf:
@@ -237,30 +244,36 @@ class LayerPrefetcher:
         unbounded block."""
         if timeout is None:
             timeout = self.policy.get_timeout_s
-        deadline = time.monotonic() + timeout
+        deadline = clock() + timeout
         with self._cv:
             self._schedule_locked(i)
             self._release_locked(i)
-            t0 = time.perf_counter()
-            while i not in self._buf:
-                if self._error is not None:
-                    raise RuntimeError(
-                        f"prefetch of layer {i} failed "
-                        f"({self.health.report()})") from self._error
-                if self._stop:
-                    raise RuntimeError(
-                        "prefetcher stopped" + (
-                            " (worker interrupted)" if self._interrupted
-                            else ""))
-                remaining = deadline - time.monotonic()
-                if remaining <= 0:
-                    self.health.stalled = True
-                    raise StallTimeout(
-                        f"layer {i} not staged within {timeout:.1f}s "
-                        f"({self.health.report()})",
-                        op=f"layer_read[{i}]")
-                self._cv.wait(min(remaining, 0.25))
-            self._stall += time.perf_counter() - t0
+            t0 = clock()
+            # blocked time here is the un-hidden disk term — attribute
+            # it to the caller's open token step as ``disk_wait`` (the
+            # span itself only traces when the wait actually stalled)
+            with self.tracer.phase("disk_wait", cat="prefetch",
+                                   track="decode", min_dur=2e-4,
+                                   label=f"disk_wait[{i}]"):
+                while i not in self._buf:
+                    if self._error is not None:
+                        raise RuntimeError(
+                            f"prefetch of layer {i} failed "
+                            f"({self.health.report()})") from self._error
+                    if self._stop:
+                        raise RuntimeError(
+                            "prefetcher stopped" + (
+                                " (worker interrupted)"
+                                if self._interrupted else ""))
+                    remaining = deadline - clock()
+                    if remaining <= 0:
+                        self.health.stalled = True
+                        raise StallTimeout(
+                            f"layer {i} not staged within {timeout:.1f}s "
+                            f"({self.health.report()})",
+                            op=f"layer_read[{i}]")
+                    self._cv.wait(min(remaining, 0.25))
+            self._stall += clock() - t0
             self._served += 1
             return self._buf[i][0]
 
@@ -304,12 +317,12 @@ class StreamingParamSource(ParamSource):
 
     def __init__(self, store: ParamStore, *, window: int = 4,
                  device_put: bool = True,
-                 policy: Optional[IOPolicy] = None):
+                 policy: Optional[IOPolicy] = None, tracer=None):
         self.store = store
         self.n_layers = store.n_layers
         self.prefetcher = LayerPrefetcher(store, window=window,
                                           device_put=device_put,
-                                          policy=policy)
+                                          policy=policy, tracer=tracer)
         head = store.head()
         if device_put:
             head = jax.tree.map(jnp.asarray, head)
@@ -344,7 +357,7 @@ class StreamingParamSource(ParamSource):
 
 def make_streaming_engine(source: ParamSource, cfg, batch: int, ctx: int,
                           *, eos_id: Optional[int] = None, spec=None,
-                          cache_dtype=jnp.float32):
+                          cache_dtype=jnp.float32, tracer=None):
     """Build a ``ContinuousBatcher`` whose prefill/decode pull weights from
     ``source`` layer by layer (resident or streamed — same engine).
     """
@@ -371,7 +384,7 @@ def make_streaming_engine(source: ParamSource, cfg, batch: int, ctx: int,
 
     return ContinuousBatcher(batch, prefill_one, write_slot, decode,
                              eos_id=eos_id, spec=spec, source=source,
-                             ctx=ctx)
+                             ctx=ctx, tracer=tracer)
 
 
 # --------------------------------------------------------------------------- #
@@ -392,13 +405,14 @@ class RingBankPrefetcher:
 
     def __init__(self, store: ParamStore, cfg, mesh, plan, *,
                  bank_specs, depth: int = 2,
-                 policy: Optional[IOPolicy] = None):
+                 policy: Optional[IOPolicy] = None, tracer=None):
         from . import serve as RS
 
         self.store = store
         self.plan = plan
         self.depth = max(depth, 1)
         self.policy = policy or IOPolicy()
+        self.tracer = tracer or NULL_TRACER
         self.health = WorkerHealth(name="RingBankPrefetcher")
         self._sharding = jax.tree.map(
             lambda s: jax.sharding.NamedSharding(mesh, s), bank_specs)
@@ -426,6 +440,8 @@ class RingBankPrefetcher:
         self._resident = 0
         self._peak = 0
         self._read = 0
+        self._stall = 0.0                 # compute front blocked in get()
+        self._served = 0
         self._events: List[PrefetchEvent] = []
         self._thread = threading.Thread(target=self._worker, daemon=True)
         self._thread.start()
@@ -452,12 +468,16 @@ class RingBankPrefetcher:
             return self._zero
         staged = self._staged.get(layer)
         if staged is None:
-            t0 = time.perf_counter()
+            t0 = clock()
             staged = self.policy.run(
                 f"layer_read[{layer}]", lambda: self._read_np(layer),
                 reopen=lambda: self._reopen(layer), health=self.health)
-            t1 = time.perf_counter()
+            t1 = clock()
             nbytes = sum(a.nbytes for a in jax.tree.leaves(staged))
+            self.tracer.span_event(f"layer_read[{layer}]", t0, t1,
+                                   cat="prefetch",
+                                   track="ring-prefetcher",
+                                   nbytes=nbytes)
             with self._cv:    # bookkeeping races with done()'s releases
                 self._staged[layer] = staged
                 self._resident += nbytes
@@ -469,8 +489,10 @@ class RingBankPrefetcher:
     def _build_bank(self, t: int):
         rows = self._rows[t]
         layers = [self._layer_np(int(i)) for i in rows]
-        bank_np = jax.tree.map(lambda *xs: np.stack(xs, 0), *layers)
-        return jax.device_put(bank_np, self._sharding)
+        with self.tracer.span(f"bank_h2d[{t}]", cat="prefetch",
+                              track="ring-prefetcher"):
+            bank_np = jax.tree.map(lambda *xs: np.stack(xs, 0), *layers)
+            return jax.device_put(bank_np, self._sharding)
 
     def _worker(self) -> None:
         while True:
@@ -516,26 +538,32 @@ class RingBankPrefetcher:
     def get(self, t: int, *, timeout: Optional[float] = None):
         if timeout is None:
             timeout = self.policy.get_timeout_s
-        deadline = time.monotonic() + timeout
+        deadline = clock() + timeout
         with self._cv:
-            while t not in self._banks:
-                if self._error is not None:
-                    raise RuntimeError(
-                        f"bank staging for step {t} failed "
-                        f"({self.health.report()})") from self._error
-                if self._stop:
-                    raise RuntimeError(
-                        "bank prefetcher stopped" + (
-                            " (worker interrupted)" if self._interrupted
-                            else ""))
-                remaining = deadline - time.monotonic()
-                if remaining <= 0:
-                    self.health.stalled = True
-                    raise StallTimeout(
-                        f"bank for step {t} not staged within "
-                        f"{timeout:.1f}s ({self.health.report()})",
-                        op=f"bank_build[{t}]")
-                self._cv.wait(min(remaining, 0.25))
+            t0 = clock()
+            with self.tracer.phase("disk_wait", cat="prefetch",
+                                   track="decode", min_dur=2e-4,
+                                   label=f"bank_wait[{t}]"):
+                while t not in self._banks:
+                    if self._error is not None:
+                        raise RuntimeError(
+                            f"bank staging for step {t} failed "
+                            f"({self.health.report()})") from self._error
+                    if self._stop:
+                        raise RuntimeError(
+                            "bank prefetcher stopped" + (
+                                " (worker interrupted)"
+                                if self._interrupted else ""))
+                    remaining = deadline - clock()
+                    if remaining <= 0:
+                        self.health.stalled = True
+                        raise StallTimeout(
+                            f"bank for step {t} not staged within "
+                            f"{timeout:.1f}s ({self.health.report()})",
+                            op=f"bank_build[{t}]")
+                    self._cv.wait(min(remaining, 0.25))
+            self._stall += clock() - t0
+            self._served += 1
             return self._banks[t]
 
     def done(self, t: int) -> None:
@@ -556,7 +584,7 @@ class RingBankPrefetcher:
         with self._cv:
             return PrefetchStats(
                 events=list(self._events), peak_resident_bytes=self._peak,
-                total_bytes_read=self._read, stall_s=0.0,
+                total_bytes_read=self._read, stall_s=self._stall,
                 layers_served=len(self._events),
                 releases=self.store.released,
                 retries=self.health.retries)
@@ -594,12 +622,13 @@ class StreamingRingDriver:
     def __init__(self, cfg, mesh, plan, store: ParamStore, *,
                  head_params: Params, cache_like, n_tokens: int = 1,
                  prefetch_depth: int = 2,
-                 policy: Optional[IOPolicy] = None):
+                 policy: Optional[IOPolicy] = None, tracer=None):
         from . import serve as RS
 
         self.cfg = cfg
         self.plan = plan
         policy = policy or IOPolicy()
+        self.tracer = tracer or NULL_TRACER
         layer_like = policy.run("layer_read[0]", lambda: store.layer(0))
         fns, bank_specs = RS.build_ring_stream_step(
             cfg, mesh, plan, head_params, cache_like, layer_like,
@@ -610,28 +639,49 @@ class StreamingRingDriver:
         self.prefetch = RingBankPrefetcher(store, cfg, mesh, plan,
                                            bank_specs=bank_specs,
                                            depth=prefetch_depth,
-                                           policy=policy)
+                                           policy=policy, tracer=tracer)
         self.n_steps = self.prefetch.n_steps
+        self._token_idx = 0
 
     def step(self, tokens, ln, cache):
-        """One decode pass (all L layers streamed once): (logits, cache)."""
+        """One decode pass (all L layers streamed once): (logits, cache).
+
+        With a tracer attached each pass is one token-step scope: bank
+        waits attribute to ``disk_wait`` (inside the prefetcher's
+        ``get``), the ring microsteps to ``compute``, and the microstep
+        spans land on the ``ring`` track of the exported trace.
+        """
+        with self.tracer.token_step(self._token_idx, track="decode",
+                                    name=f"ring_token"
+                                         f"[{self._token_idx}]"):
+            self._token_idx += 1
+            return self._step_inner(tokens, ln, cache)
+
+    def _step_inner(self, tokens, ln, cache):
         cfg, plan = self.cfg, self.plan
         B = tokens.shape[0]
         mb = B // plan.n_stages
         d = self.head_params["embed"].shape[1]
         self.prefetch.begin_pass()
-        emb_all = self._embed(tokens, self.head_params)
+        with self.tracer.phase("compute", cat="ring", track="ring",
+                               label="embed"):
+            emb_all = self._embed(tokens, self.head_params)
         dtype = emb_all.dtype
         x = jnp.zeros((plan.n_stages * mb, self.n_tokens, d), dtype)
         out_buf = jnp.zeros((plan.n_stages * B, self.n_tokens, d), dtype)
         layers_c = cache["layers"]
         for t in range(self.n_steps):
             bank = self.prefetch.get(t)
-            x, layers_c, out_buf = self._micro(
-                jnp.int32(t), x, emb_all, ln, layers_c, out_buf, bank,
-                self.head_params["final_norm"])
+            with self.tracer.phase("compute", cat="ring", track="ring",
+                                   label=f"microstep[{t}]"):
+                x, layers_c, out_buf = self._micro(
+                    jnp.int32(t), x, emb_all, ln, layers_c, out_buf,
+                    bank, self.head_params["final_norm"])
             self.prefetch.done(t)
-        logits = self._final(out_buf, self.head_params)
+        with self.tracer.phase("compute", cat="ring", track="ring",
+                               label="head"):
+            logits = self._final(out_buf, self.head_params)
+            logits = jax.block_until_ready(logits)
         new_cache = dict(cache)
         new_cache["layers"] = layers_c
         new_cache["len"] = ln + self.n_tokens
