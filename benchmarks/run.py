@@ -16,7 +16,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 SECTIONS = ("table3", "table4", "table6", "fig2", "fig8", "halda",
             "kernels", "spec_decode", "streaming", "streaming_q4",
-            "paged_kv", "fault_recovery", "observability", "roofline")
+            "paged_kv", "tiered_memory", "fault_recovery",
+            "observability", "roofline")
 
 
 def _run_section(name: str, fn) -> None:
@@ -65,6 +66,9 @@ def main(argv=None) -> int:
     if "paged_kv" in wanted:
         from . import paged_kv
         _run_section("paged_kv", paged_kv.main)
+    if "tiered_memory" in wanted:
+        from . import tiered_memory
+        _run_section("tiered_memory", tiered_memory.main)
     if "fault_recovery" in wanted:
         from . import fault_recovery
         _run_section("fault_recovery", fault_recovery.main)

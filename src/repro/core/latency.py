@@ -605,6 +605,63 @@ def kv_offload_crosscheck(page_bytes: float, bw: float,
         ratio=measured / max(predicted, 1e-12))
 
 
+@dataclasses.dataclass(frozen=True)
+class TierRecallCosts:
+    """Modeled seconds to recall one KV page into the device tier from
+    each rung of the memory hierarchy — the pricing the tiered memory
+    manager's cost-model eviction minimizes (expected recall loss =
+    hit frequency x the victim's recall cost), in place of plain LRU.
+
+    The terms are the same profiled quantities Halda's objective prices:
+    a host recall moves ``page_bytes`` over the host memory bus
+    (``cpu_membw``), a disk recall first reads the page file
+    (``disk_speed``) and then still pays the host->device hop. Device is
+    zero — the page is already where compute needs it.
+    """
+
+    page_bytes: float
+    device_s: float = 0.0
+    host_s: float = 0.0
+    disk_s: float = 0.0
+
+    def cost(self, tier: str) -> float:
+        return {"device": self.device_s, "host": self.host_s,
+                "disk": self.disk_s}[tier]
+
+
+def kv_recall_costs(page_bytes: float, *,
+                    dev: Optional[DeviceProfile] = None,
+                    membw: Optional[float] = None,
+                    disk_bps: Optional[float] = None) -> TierRecallCosts:
+    """Price per-tier KV page recall from a device profile (or explicit
+    bandwidths; defaults are a commodity host bus and SSD)."""
+    bw = membw if membw is not None else (
+        dev.cpu_membw if dev is not None else 10e9)
+    dbps = disk_bps if disk_bps is not None else (
+        dev.disk_speed() if dev is not None else 500e6)
+    host_s = page_bytes / max(bw, 1.0)
+    return TierRecallCosts(
+        page_bytes=page_bytes, device_s=0.0, host_s=host_s,
+        disk_s=page_bytes / max(dbps, 1.0) + host_s)
+
+
+def tier_recall_crosscheck(costs: TierRecallCosts, tier: str,
+                           events: Sequence) -> StreamingCheck:
+    """Cross-check a tier's modeled recall term against the measured
+    fetch timeline of that tier (``BlockOffloader.events`` for host
+    recalls, the disk store's read events for disk recalls) — the same
+    closed loop ``streaming_crosscheck`` runs on the weight path, so a
+    recall-cost table that drifts from observed stalls is detectable
+    instead of silently mis-evicting."""
+    predicted = max(costs.cost(tier), 1e-12)
+    measured = median_event_duration(events)
+    return StreamingCheck(
+        predicted_layer_s=predicted, measured_layer_s=measured,
+        measured_bps=aggregate_bps(events),
+        modeled_bps=costs.page_bytes / predicted,
+        ratio=measured / predicted)
+
+
 def median_event_duration(events: Sequence) -> float:
     """Median duration of a prefetch timeline (single definition, shared
     with ``runtime.streaming.PrefetchStats``). Zero-byte events (ring

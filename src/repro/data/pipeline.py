@@ -88,6 +88,7 @@ class Request:
     prompt: np.ndarray           # (S,) int32
     max_new_tokens: int
     arrival_s: float
+    session: Optional[str] = None   # multi-turn key for KV parking
 
 
 class RequestGenerator:

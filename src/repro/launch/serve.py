@@ -78,6 +78,24 @@ def main(argv=None) -> int:
                          "on the same requests; fails on any token "
                          "mismatch and reports KV high-water vs the "
                          "dense envelope")
+    ap.add_argument("--device-budget", type=float, default=0.0,
+                    metavar="MB",
+                    help="with --paged-kv: cap device-tier KV bytes; the "
+                         "paged pool sizes itself to the budget and the "
+                         "tier manager audits that the high-water never "
+                         "exceeds it (0 = unbounded)")
+    ap.add_argument("--host-budget", type=float, default=0.0,
+                    metavar="MB",
+                    help="with --paged-kv: cap host-tier bytes (offloaded"
+                         " + parked pages); refusals spill the coldest "
+                         "pages to the disk tier (0 = unbounded)")
+    ap.add_argument("--park-idle-s", type=float, default=None,
+                    metavar="S",
+                    help="with --paged-kv: enable session parking — "
+                         "finished sessions keep their KV on host, "
+                         "demote to per-session disk files after S idle "
+                         "seconds, and restore byte-identically on the "
+                         "next admit; runs a split-run parity check")
     ap.add_argument("--trace", default=None, metavar="OUT.json",
                     help="capture a unified runtime trace (spans from "
                          "prefetchers, offloader, decode steps, faults, "
@@ -384,6 +402,107 @@ def _paged_smoke(cfg, params, args, *, tracer=None) -> None:
           f"({st.highwater_bytes / st.dense_bytes(B, ctx):.2f}x); "
           f"prefix hits {st.prefix_hits}, CoW {st.cow_copies}, "
           f"evictions {st.evictions}")
+
+    if args.device_budget > 0 or args.host_budget > 0 \
+            or args.park_idle_s is not None:
+        _tiered_smoke(cfg, params, args, dense)
+
+
+def _tiered_smoke(cfg, params, args, dense) -> None:
+    """Budgeted/parked paged decode: same tokens, bounded residency."""
+    import shutil
+    import tempfile
+
+    import jax.numpy as jnp
+
+    from ..runtime.kvcache import make_paged_engine
+    from ..runtime.memory import MemoryBudget, TierManager
+
+    B, ctx = args.batch, args.ctx
+    budget = MemoryBudget.from_mb(
+        device=args.device_budget if args.device_budget > 0 else None,
+        host=args.host_budget if args.host_budget > 0 else None)
+    memory = TierManager(budget)
+    gen = RequestGenerator(cfg.vocab, seed=7,
+                           prompt_len=(args.prompt_len,
+                                       args.prompt_len + 8),
+                           max_new=args.new_tokens)
+    reqs = gen.generate(2 * B)
+    page_tokens = 8
+    n_pages = None if budget.device is not None \
+        else 2 + B * (-(-ctx // page_tokens))
+    ddir = tempfile.mkdtemp(prefix="kvdisk_")
+    try:
+        eng, kv = make_paged_engine(
+            params, cfg, B, ctx, n_pages=n_pages,
+            page_tokens=page_tokens, memory=memory, evict_policy="cost",
+            disk_dir=ddir, park_idle_s=args.park_idle_s)
+        fin, _ = eng.run(kv.init_cache(), reqs)
+        tiered = {f.uid: f.tokens for f in fin}
+        shed = {r.uid for r in eng.rejected}
+        bad = [u for u in tiered if dense.get(u) != tiered[u]]
+        if bad:
+            raise SystemExit(f"tiered paged-kv parity FAILED for {bad}")
+        stats = memory.stats()
+        memory.audit()
+        for tier in ("device", "host"):
+            s = stats[tier]
+            if s.capacity is not None and s.peak > s.capacity:
+                raise SystemExit(f"tiered: {tier} high-water "
+                                 f"{s.peak} > budget {s.capacity}")
+        print(f"tiered paged decode: {len(tiered)} reqs byte-identical "
+              f"({len(shed)} shed by budget); device peak "
+              f"{stats['device'].peak / 1e6:.2f} MB / "
+              f"{'∞' if budget.device is None else f'{budget.device / 1e6:.0f} MB'}, "
+              f"host peak {stats['host'].peak / 1e6:.2f} MB, disk peak "
+              f"{stats['disk'].peak / 1e6:.2f} MB; refusals "
+              f"{stats['host'].refusals}")
+
+        kv.close()
+
+        if args.park_idle_s is not None:
+            sid, half = "smoke-session", args.new_tokens
+            prompt = reqs[0].prompt
+            eng_f, kv_f = make_paged_engine(
+                params, cfg, B, ctx,
+                n_pages=2 + B * (-(-ctx // page_tokens)),
+                page_tokens=page_tokens)
+            full, _ = eng_f.run(kv_f.init_cache(),
+                                [_SessReq(900, prompt, 2 * half)])
+            kv_f.close()
+            eng_s, kv_s = make_paged_engine(
+                params, cfg, B, ctx,
+                n_pages=2 + B * (-(-ctx // page_tokens)),
+                page_tokens=page_tokens, disk_dir=ddir,
+                park_idle_s=args.park_idle_s)
+            cache = kv_s.init_cache()
+            f1, _ = eng_s.run(cache, [_SessReq(901, prompt, half, sid)])
+            if not kv_s.is_parked(sid):
+                raise SystemExit("session never parked at finish")
+            f2, _ = eng_s.run(cache, [_SessReq(902, prompt, half, sid)])
+            got = f1[0].tokens + \
+                [f for f in f2 if f.uid == 902][0].tokens
+            ref = full[0].tokens
+            if got != ref:
+                raise SystemExit("park/restore parity FAILED: "
+                                 f"{got} != {ref}")
+            st = kv_s.stats()
+            kv_s.close()
+            print(f"session parking: split run byte-identical to one "
+                  f"uninterrupted run ({len(ref)} tokens); parked "
+                  f"{st.parked_sessions}, restored "
+                  f"{st.restored_sessions}, disk written "
+                  f"{st.disk_bytes_written / 1e6:.2f} MB")
+    finally:
+        shutil.rmtree(ddir, ignore_errors=True)
+
+
+class _SessReq:
+    def __init__(self, uid, prompt, max_new, session=None):
+        self.uid = uid
+        self.prompt = prompt
+        self.max_new_tokens = max_new
+        self.session = session
 
 
 def _stream_smoke(cfg, params, prompts, args, *, ring_ctx=None,

@@ -35,6 +35,7 @@ class SlotState:
     generated: Optional[List[int]] = None
     proposed: int = 0                # draft tokens proposed (speculative)
     accepted: int = 0                # draft tokens accepted (speculative)
+    session: Optional[str] = None    # park the slot's KV under this key
 
 
 @dataclasses.dataclass
@@ -136,7 +137,8 @@ class ContinuousBatcher:
         return [i for i, s in enumerate(self.slots) if s.uid is not None]
 
     def admit(self, cache, tokens: jnp.ndarray, uid: int,
-              prompt: np.ndarray, max_new: int):
+              prompt: np.ndarray, max_new: int,
+              session: Optional[str] = None):
         """Prefill ``prompt`` and place it in a free slot.
 
         Dense caches validate ``len(prompt) + max_new`` against ``ctx``
@@ -145,11 +147,38 @@ class ContinuousBatcher:
         slot's block table or exhausts the pool. Speculative engines add
         ``gamma`` headroom on the paged path — a verify pass transiently
         writes up to gamma positions past the budget before rollback.
+
+        ``session`` names a multi-turn conversation on a parking-enabled
+        paged cache: at finish the slot's KV parks to host/disk under
+        this key instead of being discarded, and a later admit with the
+        same key restores it byte-identically and continues decoding —
+        the prompt is ignored on restore (the parked state already
+        contains it) and the first decode step resumes from the parked
+        resume token, so the concatenated token stream is exactly what
+        one uninterrupted request would have produced.
         """
+        if session is not None and self.spec is not None:
+            raise ValueError(
+                "session parking and speculative decoding cannot be "
+                "combined: the draft cache is not parked, so a restored "
+                "slot would verify against a cold draft")
         free = self.free_slots()
         if not free:
             raise RuntimeError("no free slots")
         slot = free[0]
+        if self.kv is not None and session is not None \
+                and self.kv.is_parked(session):
+            cache, meta, length = self.kv.restore_session(
+                cache, slot, session, max_new=max_new)
+            resume = int(meta["resume_token"])
+            tokens = tokens.at[slot, 0].set(resume)
+            # the resume token's KV is written by the first decode step,
+            # exactly as the last generated token's would have been — so
+            # remaining counts the full max_new and generated starts
+            # empty (the token was already emitted last turn).
+            self.slots[slot] = SlotState(uid=uid, remaining=max_new,
+                                         generated=[], session=session)
+            return cache, tokens
         if self.kv is not None:
             margin = self.spec.gamma if self.spec is not None else 0
             self.kv.plan_admit(cache, slot,
@@ -178,17 +207,32 @@ class ContinuousBatcher:
             self.spec.admit(jnp.asarray(prompt)[None, :], slot, len(prompt))
         tokens = tokens.at[slot, 0].set(first_tok)
         self.slots[slot] = SlotState(uid=uid, remaining=max_new - 1,
-                                     generated=[int(first_tok)])
+                                     generated=[int(first_tok)],
+                                     session=session)
         return cache, tokens
 
-    def _finish(self, i: int) -> None:
+    def _finish(self, i: int, cache):
         st = self.slots[i]
         self.finished.append(
             FinishedRequest(uid=st.uid, tokens=st.generated,
                             proposed=st.proposed, accepted=st.accepted))
         self.slots[i] = SlotState()                      # free immediately
         if self.kv is not None:
+            if st.session is not None and self.kv.parking and st.generated:
+                from .iopolicy import BudgetExceeded
+                try:
+                    self.kv.park_session(
+                        cache, i, st.session,
+                        meta={"resume_token": int(st.generated[-1])})
+                    return cache
+                except BudgetExceeded:
+                    # no tier can hold the parked bytes — degrade to a
+                    # normal finish; the next turn re-prefills from
+                    # scratch instead of failing the current one.
+                    self.tracer.instant(f"park-refused[{st.session}]",
+                                        cat="sched", track="decode")
             self.kv.release_slot(i)
+        return cache
 
     def kv_stats(self):
         """Allocator statistics of the attached paged cache (or None)."""
@@ -226,7 +270,7 @@ class ContinuousBatcher:
             st.remaining -= 1
             if st.remaining <= 0 or (self.eos_id is not None
                                      and tok == self.eos_id):
-                self._finish(i)
+                cache = self._finish(i, cache)
         return cache, tokens
 
     def _spec_step(self, cache, tokens: jnp.ndarray):
@@ -266,7 +310,7 @@ class ContinuousBatcher:
                 st.remaining -= 1
                 if st.remaining <= 0 or (self.eos_id is not None
                                          and tok == self.eos_id):
-                    self._finish(i)
+                    cache = self._finish(i, cache)
                     break
         if proposed:
             self.tracer.counter("spec/proposed", proposed, track="decode")
@@ -298,9 +342,10 @@ class ContinuousBatcher:
                 try:
                     with self.tracer.span(f"admit[{req.uid}]", cat="sched",
                                           track="decode", uid=req.uid):
-                        cache, tokens = self.admit(cache, tokens, req.uid,
-                                                   req.prompt,
-                                                   req.max_new_tokens)
+                        cache, tokens = self.admit(
+                            cache, tokens, req.uid, req.prompt,
+                            req.max_new_tokens,
+                            session=getattr(req, "session", None))
                     deferrals.pop(req.uid, None)
                 except PoolExhausted as e:
                     if not self.active():
@@ -340,6 +385,8 @@ class ContinuousBatcher:
                     break
             if self.active():
                 cache, tokens = self.step(cache, tokens)
+            if self.kv is not None and self.kv.parking:
+                self.kv.sweep_parked()
             steps += 1
         return self.finished, steps
 

@@ -40,7 +40,7 @@ from typing import Any, List, Optional, Sequence, Tuple, Type
 from .iopolicy import ShortReadError, StageFailure
 from .telemetry import NULL_TRACER, clock
 
-OP_KINDS = ("layer_read", "kv_h2d", "kv_d2h")
+OP_KINDS = ("layer_read", "kv_h2d", "kv_d2h", "kv_d2disk", "kv_disk2h")
 MODES = ("error", "short_read", "delay", "stall", "stage_failure")
 
 

@@ -62,6 +62,27 @@ class ShortReadError(OSError):
         self.got = got
 
 
+class BudgetExceeded(OSError):
+    """A tier of the shared memory budget refused an allocation.
+
+    An ``OSError`` subclass so :class:`IOPolicy` classifies it
+    *transient*: a refusal is usually a full tier whose bytes another
+    slot is about to release (a finishing sequence, a layer falling
+    behind the compute front), so a bounded retry under backoff is the
+    right response — unbounded growth past the budget never is. Carries
+    the tier and the byte arithmetic so the fatal wrap-up after retries
+    exhaust names the actual pressure instead of a bare refusal.
+    """
+
+    def __init__(self, msg: str, *, tier: str = "", requested: int = 0,
+                 used: int = 0, capacity: int = 0):
+        super().__init__(msg)
+        self.tier = tier
+        self.requested = requested
+        self.used = used
+        self.capacity = capacity
+
+
 class FatalIOError(RuntimeError):
     """An I/O op failed permanently: retries exhausted or the error was
     classified fatal. ``__cause__`` holds the last underlying error."""

@@ -19,7 +19,7 @@ applied it to weights:
     page unregister its hash first, so the content a hash names is
     immutable by construction.
   * **Host offload** — pages whose refcount drops to zero stay resident
-    as an LRU prefix cache; when the pool needs room they are evicted to
+    as a prefix cache; when the pool needs room they are evicted to
     pinned host copies instead of being discarded. A prefix hit on an
     offloaded page allocates a fresh device page and fetches the bytes
     back on a background staging thread (the double-buffer pattern of
@@ -27,6 +27,18 @@ applied it to weights:
     compute exactly like layer prefetch overlaps decode. The fetch
     timeline reuses ``PrefetchEvent`` so ``core.latency`` can cross-check
     the offload-traffic term against measurement.
+  * **Tiered budget** — every resident byte (the device pool, host
+    copies, disk page files) leases from one shared
+    ``runtime.memory.TierManager``; a full host tier spills the
+    offloader's coldest pages to a ``PageFileStore`` disk tier
+    (``kv_d2disk``/``kv_disk2h`` under the same retry policy and fault
+    injector as every other I/O path) and eviction can be cost-model
+    driven (``evict_policy="cost"``): the victim minimizes expected
+    recall seconds priced by ``core.latency.kv_recall_costs``, not
+    recency. ``quantize_page`` int8-compresses offloaded bytes
+    (``offload_quant=True``), and idle **sessions park** to per-session
+    disk files and restore byte-identically (``park_session`` /
+    ``restore_session`` / ``sweep_parked``).
 
 Device state lives in the engine-threaded cache pytree
 (``{"pages", "block_table", "len"}``); this module's classes hold only
@@ -37,16 +49,20 @@ from __future__ import annotations
 
 import dataclasses
 import logging
+import mmap
+import os
 import threading
 import time
 from collections import OrderedDict
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .iopolicy import IOPolicy, StallTimeout, WorkerHealth
+from .iopolicy import BudgetExceeded, IOPolicy, StallTimeout, WorkerHealth
+from .memory import TierManager
+from .paramstore import _np_dtype
 from .streaming import PrefetchEvent, PrefetchStats
 from .telemetry import NULL_TRACER, clock
 
@@ -92,20 +108,43 @@ class BlockPool:
 
     ``release`` on a page that is not active raises — the double-free is
     a bug in the caller, not a condition to paper over.
+
+    Eviction of cached (refcount-0) pages is pluggable:
+    ``evict_policy="lru"`` keeps the original least-recently-used order;
+    ``"cost"`` picks the victim minimizing *expected recall loss* —
+    ``(1 + hit count) * recall_cost_fn(key)``, where ``recall_cost_fn``
+    prices bringing the page back from wherever eviction would land it
+    (``core.latency.kv_recall_costs`` terms) — so a hot page whose
+    recall would come from disk outlives a cold page recallable from
+    host, which plain LRU cannot express.
+
+    Capacity stops being the pool's concern beyond its fixed page
+    count: ``PagedKVCache`` leases the whole pool allocation from the
+    shared :class:`~runtime.memory.TierManager` and derives ``n_pages``
+    from the device budget, so this class never carries a standalone
+    byte cap.
     """
 
-    def __init__(self, n_pages: int, page_tokens: int):
+    def __init__(self, n_pages: int, page_tokens: int, *,
+                 evict_policy: str = "lru",
+                 recall_cost_fn: Optional[Callable[[Any], float]] = None):
         if n_pages < 2:
             raise ValueError("need >= 2 pages (page 0 is the write sink)")
         if page_tokens < 1:
             raise ValueError("page_tokens must be >= 1")
+        if evict_policy not in ("lru", "cost"):
+            raise ValueError(f"unknown evict_policy {evict_policy!r} "
+                             f"(expected 'lru' or 'cost')")
         self.n_pages = n_pages
         self.page_tokens = page_tokens
+        self.evict_policy = evict_policy
+        self.recall_cost_fn = recall_cost_fn
         self._free: List[int] = list(range(n_pages - 1, SINK_PAGE, -1))
         self._ref: Dict[int, int] = {}
         self._hash_of: Dict[int, Any] = {}       # pid -> registered key
         self._pid_of: Dict[Any, int] = {}        # content key -> pid
         self._cached: "OrderedDict[int, None]" = OrderedDict()  # LRU, ref 0
+        self._freq: Dict[Any, int] = {}          # content key -> reuse hits
         self.alloc_count = 0
         self.evictions = 0
 
@@ -117,8 +156,17 @@ class BlockPool:
     def lookup(self, h) -> Optional[int]:
         """Device-resident page registered under content key ``h`` (or
         None). Keys are compared by value (the exact token chain), so a
-        hit is always the right bytes."""
-        return self._pid_of.get(h)
+        hit is always the right bytes. Hits feed the per-key reuse
+        frequency the cost-model eviction weighs."""
+        pid = self._pid_of.get(h)
+        if pid is not None:
+            self._freq[h] = self._freq.get(h, 0) + 1
+        return pid
+
+    def note_hit(self, h) -> None:
+        """Record a reuse of key ``h`` served off-device (an offloaded
+        copy) — same frequency signal as a resident ``lookup`` hit."""
+        self._freq[h] = self._freq.get(h, 0) + 1
 
     @property
     def n_free(self) -> int:
@@ -146,7 +194,8 @@ class BlockPool:
         if self._free:
             pid = self._free.pop()
         elif self._cached:
-            pid, _ = self._cached.popitem(last=False)      # LRU
+            pid = self._pick_victim()
+            del self._cached[pid]
             h = self._hash_of.pop(pid)
             del self._pid_of[h]
             self.evictions += 1
@@ -159,6 +208,21 @@ class BlockPool:
         self._ref[pid] = 1
         self.alloc_count += 1
         return pid
+
+    def _pick_victim(self) -> int:
+        """Choose which cached page eviction reclaims.
+
+        LRU: oldest entry. Cost: minimize expected recall loss,
+        ``(1 + reuse hits) * modeled recall seconds`` — evicting the
+        page we are least likely to miss, and cheapest to recall when
+        we do. Falls back to LRU without a pricing function.
+        """
+        if self.evict_policy == "cost" and self.recall_cost_fn is not None:
+            return min(
+                self._cached,
+                key=lambda p: (1 + self._freq.get(self._hash_of[p], 0))
+                * self.recall_cost_fn(self._hash_of[p]))
+        return next(iter(self._cached))                    # LRU
 
     def retain(self, pid: int) -> None:
         """Add a reference (prefix share / cached-page revival)."""
@@ -223,6 +287,192 @@ class BlockPool:
 
 
 # --------------------------------------------------------------------------- #
+#  int8 page quantization (quantize-on-write during offload)
+# --------------------------------------------------------------------------- #
+
+_SCALE_SUFFIX = "::scale"
+
+
+def quantize_page(tree: Params) -> Params:
+    """Symmetric per-vector int8 quantization of a page tree.
+
+    Same scheme as the dense int8-KV path (``models.layers.quantize_kv``):
+    each last-axis vector (one head's K or V for one token) gets an
+    ``amax/127`` float32 scale stored under ``<leaf>::scale``. Halves the
+    float32 page footprint (4B -> 1B + 4B/head_dim) on the host and disk
+    tiers; lossy, so it is applied only to evicted prefix-cache pages —
+    never to parked sessions, whose restore must be byte-identical.
+    """
+    out: Params = {}
+    for name, a in tree.items():
+        a = np.asarray(a)
+        f = a.astype(np.float32)
+        scale = np.max(np.abs(f), axis=-1, keepdims=True) / 127.0
+        scale = np.where(scale > 0, scale, 1.0).astype(np.float32)
+        out[name] = np.clip(np.rint(f / scale), -127, 127).astype(np.int8)
+        out[name + _SCALE_SUFFIX] = scale
+    return out
+
+
+def dequantize_page(tree: Params, dtype) -> Params:
+    """Inverse of :func:`quantize_page` (cast back to the pool dtype)."""
+    out: Params = {}
+    for name, a in tree.items():
+        if name.endswith(_SCALE_SUFFIX):
+            continue
+        scale = tree.get(name + _SCALE_SUFFIX)
+        if scale is None:
+            out[name] = np.asarray(a)
+        else:
+            out[name] = (np.asarray(a).astype(np.float32)
+                         * scale).astype(dtype)
+    return out
+
+
+def is_quantized_page(tree: Params) -> bool:
+    return any(k.endswith(_SCALE_SUFFIX) for k in tree)
+
+
+# --------------------------------------------------------------------------- #
+#  disk tier (per-session / per-page mmap page files)
+# --------------------------------------------------------------------------- #
+
+class PageFileStore:
+    """Disk tier for KV pages: one flat binary file per key, read back
+    through mmap views — ``ParamStore``'s layout at page granularity.
+
+    Keys are arbitrary hashables (content chain keys for spilled
+    prefix-cache pages, ``("sess", id, j)`` for a parked session's page
+    files); the spec index lives in memory, so the store is scoped to
+    one serving process like the pool it backs. Writes run under the
+    shared :class:`IOPolicy` as op ``kv_d2disk`` and reads as
+    ``kv_disk2h`` — both injectable by ``faults.FaultInjector`` and
+    retried/deadlined exactly like layer reads. ``get`` copies out of
+    the mapping, so restored bytes are private and byte-identical.
+    """
+
+    def __init__(self, directory: str, *,
+                 policy: Optional[IOPolicy] = None, injector=None,
+                 tracer=None):
+        os.makedirs(directory, exist_ok=True)
+        self.directory = directory
+        self.policy = policy or IOPolicy()
+        self.injector = injector
+        self.tracer = tracer or NULL_TRACER
+        self.health = WorkerHealth(name="PageFileStore")
+        # key -> (path, [(leaf name, shape, dtype name, offset, nbytes)])
+        self._index: Dict[Any, Tuple[str, List[Tuple]]] = {}
+        self._seq = 0
+        self._lock = threading.Lock()
+        self.written_bytes = 0
+        self.read_bytes = 0
+        self.events: List[PrefetchEvent] = []     # read (recall) timeline
+
+    def holds(self, key) -> bool:
+        with self._lock:
+            return key in self._index
+
+    def nbytes(self, key) -> int:
+        with self._lock:
+            ent = self._index.get(key)
+            return sum(s[4] for s in ent[1]) if ent else 0
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._index)
+
+    def put(self, key, tree: Params) -> int:
+        """Persist a flat page tree under ``key``; returns bytes written.
+        Atomic per key: the index only records a fully-written file, and
+        a retried write starts the file over."""
+        with self._lock:
+            path = os.path.join(self.directory,
+                                f"page_{self._seq:06d}.bin")
+            self._seq += 1
+        leaves = [(name, np.ascontiguousarray(tree[name]))
+                  for name in sorted(tree)]
+        specs: List[Tuple] = []
+        offset = 0
+        for name, arr in leaves:
+            specs.append((name, arr.shape, arr.dtype.name
+                          if arr.dtype.name != "void" else str(arr.dtype),
+                          offset, arr.nbytes))
+            offset += arr.nbytes
+
+        def write() -> int:
+            if self.injector is not None:
+                self.injector.check("kv_d2disk", key=key)
+            with open(path, "wb") as f:
+                for _, arr in leaves:
+                    f.write(arr.tobytes())
+            return offset
+
+        t0 = clock()
+        total = self.policy.run("kv_d2disk", write, health=self.health)
+        self.tracer.span_event(f"kv_d2disk[{key}]", t0, clock(), cat="kv",
+                               track="kv-offloader", nbytes=total)
+        with self._lock:
+            self._index[key] = (path, specs)
+            self.written_bytes += total
+        return total
+
+    def get(self, key) -> Params:
+        """Read a page tree back (private copies, byte-identical)."""
+        with self._lock:
+            path, specs = self._index[key]
+
+        def read() -> Params:
+            if self.injector is not None:
+                self.injector.check("kv_disk2h", key=key)
+            with open(path, "rb") as f:
+                mm = mmap.mmap(f.fileno(), 0, access=mmap.ACCESS_READ)
+                try:
+                    buf = np.frombuffer(mm, dtype=np.uint8)
+                    out: Params = {}
+                    for name, shape, dt, off, nb in specs:
+                        out[name] = buf[off:off + nb] \
+                            .view(_np_dtype(dt)).reshape(shape).copy()
+                    return out
+                finally:
+                    del buf
+                    mm.close()
+
+        t0 = clock()
+        out = self.policy.run("kv_disk2h", read, health=self.health)
+        t1 = clock()
+        total = sum(s[4] for s in specs)
+        self.tracer.span_event(f"kv_disk2h[{key}]", t0, t1, cat="kv",
+                               track="kv-offloader", nbytes=total)
+        with self._lock:
+            self.read_bytes += total
+            self.events.append(PrefetchEvent(0, t0, t1, total))
+        return out
+
+    def drop(self, key) -> int:
+        """Forget ``key`` and delete its file; returns bytes freed."""
+        with self._lock:
+            ent = self._index.pop(key, None)
+        if ent is None:
+            return 0
+        path, specs = ent
+        try:
+            os.unlink(path)
+        except OSError:       # pragma: no cover - already gone
+            pass
+        return sum(s[4] for s in specs)
+
+    def close(self) -> None:
+        with self._lock:
+            entries = list(self._index.values())
+            self._index.clear()
+        for path, _ in entries:
+            try:
+                os.unlink(path)
+            except OSError:   # pragma: no cover - already gone
+                pass
+
+
+# --------------------------------------------------------------------------- #
 #  host offload (staged fetch, streaming.py's double-buffer pattern)
 # --------------------------------------------------------------------------- #
 
@@ -236,18 +486,41 @@ class BlockOffloader:
     are scheduled at admit time and collected after the admit's prefill
     compute, so the copy overlaps compute exactly like the layer
     prefetcher's window reads.
+
+    Host copies lease from the shared memory budget's ``host`` tier
+    (private/unbounded when no manager is passed — the seed behavior).
+    A refused lease no longer grows past the budget: the offloader
+    first **spills** its oldest host pages to the ``disk`` tier (a
+    :class:`PageFileStore`, op ``kv_d2disk``) to make room, and only
+    when there is no disk store — or it is full too — surfaces
+    :class:`BudgetExceeded`, which the shared policy classifies
+    transient (a finishing slot is usually about to release pages).
+    ``quant=True`` int8-quantizes pages on write (``quantize_page``),
+    halving host/disk bytes at the price of bounded dequantization
+    drift on refetch.
     """
 
     def __init__(self, *, policy: Optional[IOPolicy] = None,
-                 injector=None, tracer=None) -> None:
+                 injector=None, tracer=None,
+                 memory: Optional[TierManager] = None,
+                 owner: str = "kv",
+                 disk: Optional[PageFileStore] = None,
+                 quant: bool = False, page_dtype=np.float32) -> None:
         self.policy = policy or IOPolicy()
         self.injector = injector          # faults.FaultInjector or None
         self.tracer = tracer or NULL_TRACER
+        self.memory = memory if memory is not None \
+            else TierManager(tracer=tracer, name="kv-offload-memory")
+        self.owner = owner
+        self.disk = disk
+        self.quant = quant
+        self.page_dtype = page_dtype
         self.health = WorkerHealth(name="BlockOffloader")
         self.stall_s = 0.0                # get() blocked on a staging fetch
-        self._host: Dict[int, Params] = {}                # hash -> np tree
-        self._staged: Dict[int, Params] = {}              # hash -> jnp tree
-        self._queue: List[int] = []
+        self._host: Dict[Any, Tuple[Params, int]] = {}  # key -> (tree, nb)
+        self._disk_keys: Dict[Any, int] = {}            # spilled key -> nb
+        self._staged: Dict[Any, Params] = {}            # key -> jnp tree
+        self._queue: List[Any] = []
         self._cv = threading.Condition()
         self._stop = False
         self._closed = False
@@ -256,13 +529,50 @@ class BlockOffloader:
         self.events: List[PrefetchEvent] = []
         self.offloaded_bytes = 0
         self.fetched_bytes = 0
+        self.spilled_pages = 0            # host pages demoted to disk
+        self.fetched_disk_pages = 0       # recalls served from disk
         self._thread = threading.Thread(target=self._worker, daemon=True)
         self._thread.start()
 
     def _h2d(self, tree: Params) -> Params:
         if self.injector is not None:
             self.injector.check("kv_h2d")
+        if is_quantized_page(tree):       # dequantize-on-read (lossy tier)
+            tree = dequantize_page(tree, self.page_dtype)
         return jax.tree.map(jnp.asarray, tree)            # H2D staging
+
+    def _fetch_tree(self, h) -> Tuple[Optional[Params], str, int]:
+        """Locate a page's bytes: host hit, or disk recall (kv_disk2h)
+        staged through a transient host lease."""
+        with self._cv:
+            ent = self._host.get(h)
+            if ent is not None:
+                return ent[0], "host", ent[1]
+            on_disk = h in self._disk_keys
+        if on_disk:
+            nbytes = self.disk.nbytes(h)
+            # the staging lease must not deadlock against our own host
+            # copies: when the host tier is full of offloaded pages,
+            # spill the coldest to disk to make room; only wait on the
+            # budget once there is nothing left of ours to demote
+            acquired = False
+            with self._cv:
+                while not acquired:
+                    acquired = self.memory.try_lease("host", nbytes,
+                                                     self.owner)
+                    if not acquired and not self._spill_one_locked():
+                        break
+            if not acquired:
+                self.memory.lease("host", nbytes, self.owner, wait=True,
+                                  timeout=self.policy.op_deadline_s,
+                                  cancelled=lambda: self._stop)
+            try:
+                tree = self.disk.get(h)   # policy + injector inside
+            except BaseException:
+                self.memory.release("host", nbytes, self.owner)
+                raise
+            return tree, "disk", nbytes
+        return None, "none", 0
 
     def _worker(self) -> None:
         while True:
@@ -272,10 +582,10 @@ class BlockOffloader:
                 if self._stop:
                     return
                 h = self._queue.pop(0)
-                tree = self._host.get(h)
-            if tree is None:
-                continue
             try:
+                tree, src, nbytes = self._fetch_tree(h)
+                if tree is None:
+                    continue
                 t0 = clock()
                 staged = self.policy.run("kv_h2d",
                                          lambda: self._h2d(tree),
@@ -293,8 +603,15 @@ class BlockOffloader:
                     self._error = e
                     self._cv.notify_all()
                 return
-            nbytes = sum(np.asarray(a).nbytes
-                         for a in jax.tree.leaves(tree))
+            if src == "disk":
+                # staged on device now: drop the transient host lease,
+                # the disk copy and its disk-tier lease
+                self.memory.release("host", nbytes, self.owner)
+                with self._cv:
+                    disk_nb = self._disk_keys.pop(h, 0)
+                self.disk.drop(h)
+                self.memory.release("disk", disk_nb, self.owner)
+                self.fetched_disk_pages += 1
             self.tracer.span_event(f"kv_h2d[{h}]", t0, t1, cat="kv",
                                    track="kv-offloader", nbytes=nbytes)
             with self._cv:
@@ -305,27 +622,66 @@ class BlockOffloader:
 
     # -- eviction side ----------------------------------------------------- #
 
-    def offload(self, h: int, tree: Params) -> None:
+    def _spill_one_locked(self) -> bool:
+        """Demote the oldest host page to the disk tier to make room.
+        Returns False when there is nothing to spill or no disk store."""
+        if self.disk is None or not self._host:
+            return False
+        key = next(iter(self._host))
+        tree, nbytes = self._host[key]
+        # claim disk capacity first (refusal -> BudgetExceeded before any
+        # bytes move), then write; roll the move back if the write fails
+        self.memory.move("host", "disk", nbytes, self.owner)
+        try:
+            self.disk.put(key, tree)      # op kv_d2disk under the policy
+        except BaseException:
+            self.memory.move("disk", "host", nbytes, self.owner)
+            raise
+        del self._host[key]
+        self._disk_keys[key] = nbytes
+        self.spilled_pages += 1
+        return True
+
+    def offload(self, h, tree: Params) -> None:
+        if self.quant:                    # quantize-on-write: host/disk
+            tree = quantize_page(tree)    # hold the int8 + scale bytes
+        nbytes = sum(np.asarray(a).nbytes
+                     for a in jax.tree.leaves(tree))
+
         def put():
             if self.injector is not None:
                 self.injector.check("kv_d2h")
-            return sum(np.asarray(a).nbytes
-                       for a in jax.tree.leaves(tree))
+            # enforce the host budget: spill cold pages to disk until the
+            # lease fits; a refusal with no disk room left surfaces as
+            # BudgetExceeded (transient under the policy — a finishing
+            # slot may free host bytes before the retries exhaust)
+            with self._cv:
+                while not self.memory.try_lease("host", nbytes,
+                                                self.owner):
+                    if not self._spill_one_locked():
+                        st = self.memory.stats()["host"]
+                        raise BudgetExceeded(
+                            f"KV offload of {nbytes} B refused: host "
+                            f"tier {st.used}/{st.capacity} B used and "
+                            f"no disk tier to spill to",
+                            tier="host", requested=nbytes, used=st.used,
+                            capacity=st.capacity or 0)
+            return nbytes
 
         # the D2H copy happened in the eviction callback; this commits the
         # host store (and is where an injected kv_d2h fault surfaces) —
         # transient faults retry under the shared policy
         t0 = clock()
-        nbytes = self.policy.run("kv_d2h", put, health=self.health)
+        self.policy.run("kv_d2h", put, health=self.health)
         self.tracer.span_event(f"kv_d2h[{h}]", t0, clock(), cat="kv",
                                track="kv-offloader", nbytes=nbytes)
         with self._cv:
-            self._host[h] = tree
+            self._host[h] = (tree, nbytes)
             self.offloaded_bytes += nbytes
 
-    def holds(self, h: int) -> bool:
+    def holds(self, h) -> bool:
         with self._cv:
-            return h in self._host
+            return h in self._host or h in self._disk_keys
 
     # -- fetch side -------------------------------------------------------- #
 
@@ -363,7 +719,9 @@ class BlockOffloader:
                             f"({self.health.report()})", op="kv_h2d")
                     self._cv.wait(min(remaining, 0.25))
                 staged = self._staged.pop(h)
-                self._host.pop(h, None)  # back on device; host copy done
+                ent = self._host.pop(h, None)   # back on device
+                if ent is not None:             # host copy done: unlease
+                    self.memory.release("host", ent[1], self.owner)
                 self.stall_s += clock() - t_enter
                 return staged
 
@@ -378,11 +736,14 @@ class BlockOffloader:
             events=events, peak_resident_bytes=0,
             total_bytes_read=fetched, stall_s=self.stall_s,
             layers_served=len(events), releases=0,
-            retries=self.health.retries)
+            retries=self.health.retries,
+            budget_refusals=sum(s.refusals
+                                for s in self.memory.stats().values()))
 
     def close(self, timeout: float = 5.0) -> bool:
         """Stop the worker (idempotent); True once it has joined, False
-        with a logged stall report if it is stuck."""
+        with a logged stall report if it is stuck. Host copies hand
+        their leases back so a shared budget balances after shutdown."""
         with self._cv:
             self._closed = True
             self._stop = True
@@ -393,6 +754,13 @@ class BlockOffloader:
             log.error("BlockOffloader.close: worker failed to join "
                       "within %.1fs — %s", timeout, self.health.report())
             return False
+        with self._cv:
+            for h in list(self._host):
+                _, nbytes = self._host.pop(h)
+                self.memory.release("host", nbytes, self.owner)
+            for h in list(self._disk_keys):
+                self.memory.release("disk", self._disk_keys.pop(h),
+                                    self.owner)
         self.health.closed = True
         return True
 
@@ -418,6 +786,13 @@ class KVStats:
     fetch_events: List[PrefetchEvent]
     fetch_stall_s: float = 0.0        # admits blocked on a staging fetch
     fetch_retries: int = 0            # transient I/O retries (IOPolicy)
+    disk_bytes_written: int = 0       # kv_d2disk traffic (spills + parks)
+    disk_bytes_read: int = 0          # kv_disk2h traffic (recalls)
+    spilled_pages: int = 0            # host pages demoted to disk
+    fetched_disk_pages: int = 0       # prefix recalls served from disk
+    parked_sessions: int = 0          # lifetime park count
+    restored_sessions: int = 0        # lifetime restore count
+    budget_refusals: int = 0          # tier leases the budget refused
 
     @property
     def highwater_bytes(self) -> int:
@@ -444,6 +819,27 @@ def paged_cache_spec(cfg) -> Dict[str, Tuple[int, ...]]:
             "v": (max(cfg.kv_heads, 1), cfg.head_dim)}
 
 
+@dataclasses.dataclass
+class ParkedSession:
+    """A session's KV lifted off the device tier between requests.
+
+    ``tier == "host"``: ``pages`` holds the np page trees. ``tier ==
+    "disk"``: pages live in per-session :class:`PageFileStore` files
+    (keys ``("sess", session, j)``) and ``pages`` is None. ``meta`` is
+    an opaque engine blob (resume token) returned verbatim on restore —
+    the cache parks bytes, not scheduling state.
+    """
+
+    session: str
+    length: int
+    n_pages: int
+    nbytes: int
+    tier: str
+    pages: Optional[List[Params]]
+    meta: dict
+    parked_t: float
+
+
 class PagedKVCache:
     """Owner of the block pool + per-slot page lists for a serving batch.
 
@@ -457,25 +853,72 @@ class PagedKVCache:
       "block_table": (B, max_pages_per_slot) int32,
       "len":         (B,) int32,
     }
+
+    Tiered-memory integration (``memory``): the whole pool allocation
+    leases from the shared ``device`` tier at construction (``n_pages``
+    may be omitted and is then derived from the device budget), the
+    offloader's host copies lease from ``host``, and the disk tier
+    (``disk_dir``) holds spilled prefix pages plus **parked sessions**:
+    ``park_session`` lifts an idle slot's pages off the device
+    (host first, demoted to per-session page files by ``sweep_parked``
+    after ``park_idle_s`` seconds), and ``restore_session`` brings them
+    back byte-identically on the session's next request.
     """
 
-    def __init__(self, cfg, *, batch: int, ctx: int, n_pages: int,
+    def __init__(self, cfg, *, batch: int, ctx: int,
+                 n_pages: Optional[int] = None,
                  page_tokens: int = 16, dtype=jnp.float32,
                  offload: bool = True,
                  io_policy: Optional[IOPolicy] = None, injector=None,
-                 tracer=None):
+                 tracer=None, memory: Optional[TierManager] = None,
+                 evict_policy: str = "lru", offload_quant: bool = False,
+                 disk_dir: Optional[str] = None,
+                 park_idle_s: Optional[float] = None,
+                 recall_costs=None):
         self.cfg = cfg
         self.B = batch
         self.page_tokens = page_tokens
         self.max_pages = -(-ctx // page_tokens)
         self.ctx = self.max_pages * page_tokens
-        self.pool = BlockPool(n_pages, page_tokens)
-        self.offloader = BlockOffloader(policy=io_policy,
-                                        injector=injector,
-                                        tracer=tracer) \
-            if offload else None
         self._spec = paged_cache_spec(cfg)
         self.dtype = dtype
+        self.memory = memory if memory is not None \
+            else TierManager(tracer=tracer, name="kv-memory")
+        if n_pages is None:
+            avail = self.memory.available("device")
+            if avail is None:
+                raise ValueError(
+                    "n_pages omitted: pass a memory manager with a "
+                    "device budget to derive the pool size from it")
+            n_pages = max(int(avail // max(self.page_bytes, 1)), 2)
+        if recall_costs is None:
+            from ..core.latency import kv_recall_costs
+            recall_costs = kv_recall_costs(self.page_bytes)
+        self.recall_costs = recall_costs
+        self.pool = BlockPool(
+            n_pages, page_tokens, evict_policy=evict_policy,
+            recall_cost_fn=self._recall_cost
+            if evict_policy == "cost" else None)
+        # the pool array is one fixed device allocation — lease it whole
+        # (construction fails loudly if the budget cannot hold it)
+        self._pool_lease = n_pages * self.page_bytes
+        self.memory.lease("device", self._pool_lease, "kv")
+        self.disk = PageFileStore(disk_dir, policy=io_policy,
+                                  injector=injector, tracer=tracer) \
+            if disk_dir else None
+        np_dtype = np.dtype(jnp.zeros((), dtype).dtype)
+        self.offloader = BlockOffloader(policy=io_policy,
+                                        injector=injector,
+                                        tracer=tracer,
+                                        memory=self.memory,
+                                        disk=self.disk,
+                                        quant=offload_quant,
+                                        page_dtype=np_dtype) \
+            if offload else None
+        self.park_idle_s = park_idle_s
+        self._parked: Dict[str, ParkedSession] = {}
+        self.parked_count = 0
+        self.restored_count = 0
         # host mirrors
         self._slot_pages: List[List[int]] = [[] for _ in range(batch)]
         self._len = [0] * batch
@@ -536,7 +979,32 @@ class PagedKVCache:
             fetched_bytes=off.fetched_bytes if off else 0,
             fetch_events=list(off.events) if off else [],
             fetch_stall_s=off.stall_s if off else 0.0,
-            fetch_retries=off.health.retries if off else 0)
+            fetch_retries=off.health.retries if off else 0,
+            disk_bytes_written=self.disk.written_bytes if self.disk else 0,
+            disk_bytes_read=self.disk.read_bytes if self.disk else 0,
+            spilled_pages=off.spilled_pages if off else 0,
+            fetched_disk_pages=off.fetched_disk_pages if off else 0,
+            parked_sessions=self.parked_count,
+            restored_sessions=self.restored_count,
+            budget_refusals=sum(
+                s.refusals for s in self.memory.stats().values()))
+
+    # -- cost-model eviction pricing --------------------------------------- #
+
+    def _recall_cost(self, h) -> float:
+        """Modeled seconds to recall page ``h`` if evicted now — the
+        ``core.latency.kv_recall_costs`` term for the tier eviction
+        would land it in (host normally; disk when it already lives
+        there or the host tier has no room left)."""
+        if self.offloader is None:
+            return self.recall_costs.disk_s      # content would be lost
+        if self.disk is not None:
+            if self.disk.holds(h):
+                return self.recall_costs.disk_s
+            avail = self.memory.available("host")
+            if avail is not None and avail < self.page_bytes:
+                return self.recall_costs.disk_s  # eviction would spill
+        return self.recall_costs.host_s
 
     # -- page content ops (functional on the cache) ------------------------ #
 
@@ -651,7 +1119,8 @@ class PagedKVCache:
                     pid = self.pool.alloc(evict_cb=self._evict_cb(cache))
                     self.offloader.schedule(h)
                     self.pool.register(h, pid)
-                    kind = "fetched"
+                    self.pool.note_hit(h)    # off-device reuse: same
+                    kind = "fetched"         # frequency signal as lookup
                 else:
                     pid = self.pool.alloc(evict_cb=self._evict_cb(cache))
                     self.pool.register(h, pid)
@@ -808,21 +1277,191 @@ class PagedKVCache:
         self._reserved[slot] = 0
         self._dirty.add(slot)
 
+    # -- session parking (disk-tier resumable sessions) --------------------- #
+
+    @property
+    def parking(self) -> bool:
+        """Whether session parking is configured (``park_idle_s``)."""
+        return self.park_idle_s is not None
+
+    def is_parked(self, session: str) -> bool:
+        return session in self._parked
+
+    def _session_key(self, session: str, j: int) -> tuple:
+        return ("sess", session, j)
+
+    def _write_session_files(self, session: str,
+                             trees: List[Params]) -> None:
+        for j, tree in enumerate(trees):
+            self.disk.put(self._session_key(session, j), tree)
+
+    def _drop_session_files(self, session: str, n: int) -> None:
+        for j in range(n):
+            self.disk.drop(self._session_key(session, j))
+
+    def park_session(self, cache, slot: int, session: str,
+                     meta: dict) -> None:
+        """Lift ``slot``'s pages off the device tier under ``session``.
+
+        Copies every page's bytes to leased host buffers (or straight
+        to per-session disk files when the host tier refuses) and frees
+        the device pages — the slot is immediately reusable. ``meta``
+        (the engine's resume token) rides along and comes back verbatim
+        from :meth:`restore_session`. Parking is always lossless:
+        quantize-on-write applies only to the offloader's prefix tier,
+        never here, so the restored token stream is byte-identical.
+        Raises :class:`BudgetExceeded` when neither host nor disk can
+        hold the session (the caller drops it instead of overshooting).
+        """
+        if session in self._parked:      # stale park: a newer request
+            self._drop_parked(session)   # supersedes the old KV
+        pids = self._slot_pages[slot]
+        trees = [{name: np.asarray(arr[:, pid])
+                  for name, arr in cache["pages"].items()}
+                 for pid in pids]
+        nbytes = sum(a.nbytes for t in trees for a in t.values())
+        if self.memory.try_lease("host", nbytes, "kv"):
+            tier = "host"
+        else:
+            if self.disk is None:
+                st = self.memory.stats()["host"]
+                raise BudgetExceeded(
+                    f"cannot park session {session!r}: host tier "
+                    f"{st.used}/{st.capacity} B used and no disk tier",
+                    tier="host", requested=nbytes, used=st.used,
+                    capacity=st.capacity or 0)
+            self.memory.lease("disk", nbytes, "kv")   # BudgetExceeded ok
+            try:
+                self._write_session_files(session, trees)
+            except BaseException:
+                self.memory.release("disk", nbytes, "kv")
+                raise
+            tier = "disk"
+        self._parked[session] = ParkedSession(
+            session=session, length=self._len[slot], n_pages=len(pids),
+            nbytes=nbytes, tier=tier,
+            pages=trees if tier == "host" else None, meta=dict(meta),
+            parked_t=clock())
+        self.parked_count += 1
+        self.release_slot(slot)    # device pages free; prompt pages may
+        self._note_highwater()     # still serve the prefix cache
+
+    def sweep_parked(self) -> int:
+        """Demote host-parked sessions idle for ``park_idle_s`` seconds
+        to per-session disk page files; returns sessions demoted. A full
+        disk tier leaves a session on host (retried next sweep)."""
+        if not self.parking or self.disk is None:
+            return 0
+        now = clock()
+        n = 0
+        for ps in self._parked.values():
+            if ps.tier != "host" or now - ps.parked_t < self.park_idle_s:
+                continue
+            try:
+                self.memory.move("host", "disk", ps.nbytes, "kv")
+            except BudgetExceeded:
+                continue                 # disk full: stay on host
+            try:
+                self._write_session_files(ps.session, ps.pages)
+            except BaseException:
+                self.memory.move("disk", "host", ps.nbytes, "kv")
+                raise
+            ps.tier = "disk"
+            ps.pages = None
+            n += 1
+        return n
+
+    def restore_session(self, cache, slot: int, session: str, *,
+                        max_new: int):
+        """Bring a parked session's pages back onto the device into
+        ``slot``; returns ``(cache, meta, length)`` with ``meta`` the
+        blob ``park_session`` recorded. Restored bytes are identical to
+        the parked bytes (host copies or disk page files — both
+        lossless), so decode continues exactly where it left off.
+        Raises ``PoolExhausted`` (the session stays parked) when the
+        pool cannot hold it right now — the engine's deferral path.
+        """
+        ps = self._parked[session]
+        bs = self.page_tokens
+        total = ps.length + max_new
+        if total > self.ctx:
+            raise ValueError(
+                f"session {session!r} needs {total} positions "
+                f"(parked len {ps.length} + max_new {max_new}) but the "
+                f"paged slot addresses only {self.ctx}")
+        if self._slot_pages[slot]:
+            raise RuntimeError(f"slot {slot} already holds pages")
+        worst = -(-total // bs) + 1
+        committed = sum(self._reserved) + worst
+        if committed > self._usable:
+            raise PoolExhausted(
+                f"KV block pool exhausted: restoring session "
+                f"{session!r} would oversubscribe "
+                f"{committed}/{self._usable} pages")
+        pids: List[int] = []
+        try:
+            for _ in range(ps.n_pages):
+                pids.append(self.pool.alloc(
+                    evict_cb=self._evict_cb(cache)))
+        except PoolExhausted:
+            for pid in pids:
+                self.pool.release(pid)
+            raise                        # still parked; admit defers
+        if ps.tier == "host":
+            trees = ps.pages
+        else:
+            trees = [self.disk.get(self._session_key(session, j))
+                     for j in range(ps.n_pages)]   # op kv_disk2h
+        cache = self._scatter_pages(cache, pids, trees)
+        self._slot_pages[slot] = pids
+        self._len[slot] = ps.length
+        self._reserved[slot] = worst
+        self._dirty.add(slot)
+        cache = self._sync_tables(cache)
+        del self._parked[session]
+        self.memory.release(ps.tier, ps.nbytes, "kv")
+        if ps.tier == "disk":
+            self._drop_session_files(session, ps.n_pages)
+        self.restored_count += 1
+        self._note_highwater()
+        return cache, ps.meta, ps.length
+
+    def _drop_parked(self, session: str) -> None:
+        ps = self._parked.pop(session, None)
+        if ps is None:
+            return
+        self.memory.release(ps.tier, ps.nbytes, "kv")
+        if ps.tier == "disk":
+            self._drop_session_files(session, ps.n_pages)
+
     def close(self) -> None:
+        for session in list(self._parked):
+            self._drop_parked(session)
         if self.offloader is not None:
             self.offloader.close()
+        if self.disk is not None:
+            self.disk.close()
+        if self._pool_lease:           # idempotent: lease returns once
+            self.memory.release("device", self._pool_lease, "kv")
+            self._pool_lease = 0
 
 
 # --------------------------------------------------------------------------- #
 #  continuous-batching integration
 # --------------------------------------------------------------------------- #
 
-def make_paged_engine(params, cfg, batch: int, ctx: int, *, n_pages: int,
+def make_paged_engine(params, cfg, batch: int, ctx: int, *,
+                      n_pages: Optional[int] = None,
                       page_tokens: int = 16, eos_id: Optional[int] = None,
                       spec=None, offload: bool = True,
                       cache_dtype=jnp.float32,
                       io_policy: Optional[IOPolicy] = None,
-                      injector=None, tracer=None):
+                      injector=None, tracer=None,
+                      memory: Optional[TierManager] = None,
+                      evict_policy: str = "lru",
+                      offload_quant: bool = False,
+                      disk_dir: Optional[str] = None,
+                      park_idle_s: Optional[float] = None):
     """Build a ``ContinuousBatcher`` over a paged KV cache.
 
     Returns ``(engine, kv)``; drive it with ``engine.run(kv.init_cache(),
@@ -836,7 +1475,10 @@ def make_paged_engine(params, cfg, batch: int, ctx: int, *, n_pages: int,
     kv = PagedKVCache(cfg, batch=batch, ctx=ctx, n_pages=n_pages,
                       page_tokens=page_tokens, dtype=cache_dtype,
                       offload=offload, io_policy=io_policy,
-                      injector=injector, tracer=tracer)
+                      injector=injector, tracer=tracer, memory=memory,
+                      evict_policy=evict_policy,
+                      offload_quant=offload_quant, disk_dir=disk_dir,
+                      park_idle_s=park_idle_s)
 
     def prefill_one(prompt):
         c1 = M.init_cache(cfg, 1, ctx, dtype=cache_dtype)

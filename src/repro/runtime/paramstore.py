@@ -302,6 +302,7 @@ class ParamStore(ParamSource):
         self._maps: Dict[int, mmap.mmap] = {}
         self._files: Dict[int, Any] = {}
         self.released = 0          # release() calls that actually dropped
+        self.released_bytes = 0    # bytes those drops returned to the OS
 
     @property
     def quant_format(self) -> Optional[str]:
@@ -410,7 +411,14 @@ class ParamStore(ParamSource):
         return self._read_leaves(self._head_leaves, buf, copy=True)
 
     def release(self, i: int) -> None:
-        """Drop layer i's page-cache mapping behind the compute front."""
+        """Drop layer i's page-cache mapping behind the compute front.
+
+        The madvise is advisory, but the accounting is not: every
+        successful drop adds ``layer_nbytes`` to ``released_bytes`` so a
+        tier-budget audit can balance bytes-read against bytes-returned
+        (surfaced through ``PrefetchStats.released_bytes`` and the
+        ``store/released_bytes`` telemetry counter).
+        """
         mm = self._maps.get(i)
         if mm is None:
             return
@@ -418,6 +426,7 @@ class ParamStore(ParamSource):
             if hasattr(mmap, "MADV_DONTNEED"):
                 mm.madvise(mmap.MADV_DONTNEED)
                 self.released += 1
+                self.released_bytes += self.layer_nbytes
         except (OSError, ValueError):  # pragma: no cover - platform quirks
             pass
 

@@ -52,6 +52,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .iopolicy import IOPolicy, StallTimeout, WorkerHealth
+from .memory import TierManager
 from .paramstore import ParamSource, ParamStore
 from .telemetry import NULL_TRACER, clock
 
@@ -89,6 +90,8 @@ class PrefetchStats:
     layers_served: int
     releases: int
     retries: int = 0                  # transient I/O retries (IOPolicy)
+    released_bytes: int = 0           # bytes the store returned to the OS
+    budget_refusals: int = 0          # staging leases the budget refused
 
     @property
     def bytes_per_layer(self) -> float:
@@ -121,11 +124,21 @@ class LayerPrefetcher:
     front (cyclic distance >= window). Access is expected to be the decode
     pattern — layers 0..L-1 in order, repeated per token — but any order
     is correct (out-of-window requests are staged on demand).
+
+    ``window`` is a *scheduling lookahead*, not a capacity cap: every
+    staged byte is leased from ``memory`` (a shared
+    :class:`~runtime.memory.TierManager`, or a private unbounded one when
+    omitted) — host bytes while staging, moved to the device tier after
+    ``device_put`` — so one ``MemoryBudget`` bounds weights and KV
+    together and a full tier throttles the worker (it blocks for a
+    release) instead of overshooting.
     """
 
     def __init__(self, store: ParamStore, *, window: int = 4,
                  device_put: bool = True,
-                 policy: Optional[IOPolicy] = None, tracer=None):
+                 policy: Optional[IOPolicy] = None, tracer=None,
+                 memory: Optional[TierManager] = None,
+                 owner: str = "weights"):
         if window < 1:
             raise ValueError("window must be >= 1")
         self.store = store
@@ -133,8 +146,12 @@ class LayerPrefetcher:
         self.device_put = device_put
         self.policy = policy or IOPolicy()
         self.tracer = tracer or NULL_TRACER
+        self.memory = memory if memory is not None \
+            else TierManager(tracer=tracer, name="prefetch-memory")
+        self.owner = owner
         self.health = WorkerHealth(name="LayerPrefetcher")
-        self._buf: Dict[int, Tuple[Params, int]] = {}   # layer -> (tree, nb)
+        # layer -> (tree, nbytes, tier at rest)
+        self._buf: Dict[int, Tuple[Params, int, str]] = {}
         self._queue: deque = deque()
         self._inflight: set = set()
         self._cv = threading.Condition()
@@ -159,7 +176,7 @@ class LayerPrefetcher:
             reopen(i)
 
     def _stage(self, i: int) -> Tuple[Params, int, float, float]:
-        """Copy layer i out of the mmap into private buffers (+ device)."""
+        """Copy layer i out of the mmap into private host buffers."""
         self.store.willneed(i)
         t0 = clock()
         views = self.store.layer(i)
@@ -169,14 +186,16 @@ class LayerPrefetcher:
         staged = jax.tree.map(lambda a: np.array(a, copy=True), views)
         t1 = clock()                 # event = disk->staging only (the term
         nbytes = sum(a.nbytes for a in jax.tree.leaves(staged))
-        if self.device_put:          # the latency model prices as b/s_disk)
-            # async H2D: the transfer of layer k+w overlaps compute on k
-            with self.tracer.span("h2d", cat="prefetch",
-                                  track="prefetcher", layer=i):
-                staged = jax.tree.map(jnp.asarray, staged)
-        return staged, nbytes, t0, t1
+        return staged, nbytes, t0, t1     # latency model prices b/s_disk
+
+    def _fail(self, i: int, e: BaseException) -> None:
+        with self._cv:
+            self._error = e
+            self._inflight.discard(i)
+            self._cv.notify_all()
 
     def _worker(self) -> None:
+        est = self.store.layer_nbytes     # upper bound on a staged layer
         while True:
             with self._cv:
                 while not self._queue and not self._stop:
@@ -185,6 +204,17 @@ class LayerPrefetcher:
                     return
                 i = self._queue.popleft()
                 self._inflight.add(i)
+            # lease *before* materializing: the sum of live leases is an
+            # upper bound on true residency, so the budget's high-water
+            # holds by construction. A full tier blocks here (throttling
+            # prefetch) until the front releases a layer behind it.
+            try:
+                self.memory.lease("host", est, self.owner, wait=True,
+                                  timeout=self.policy.op_deadline_s,
+                                  cancelled=lambda: self._stop)
+            except BaseException as e:
+                self._fail(i, e)
+                return
             try:
                 staged, nbytes, t0, t1 = self.policy.run(
                     f"layer_read[{i}]", lambda: self._stage(i),
@@ -193,6 +223,7 @@ class LayerPrefetcher:
                 # control flow, never a latched I/O error: unblock any
                 # waiting get() (it raises "prefetcher stopped") and let
                 # the exception terminate the worker thread
+                self.memory.release("host", est, self.owner)
                 with self._cv:
                     self._stop = True
                     self._interrupted = True
@@ -200,20 +231,42 @@ class LayerPrefetcher:
                     self._cv.notify_all()
                 raise
             except BaseException as e:   # surface in get(), don't deadlock
-                with self._cv:
-                    self._error = e
-                    self._inflight.discard(i)
-                    self._cv.notify_all()
+                self.memory.release("host", est, self.owner)
+                self._fail(i, e)
                 return
+            # shrink the upper-bound lease to the bytes actually staged
+            # (a v2 store reads the ~4x-smaller packed footprint)
+            self.memory.resize("host", self.owner, est, nbytes)
+            tier = "host"
+            if self.device_put:
+                # async H2D: the transfer of layer k+w overlaps compute on
+                # k. Lease device bytes first, copy, then drop the host
+                # staging lease (the np buffers die with the rebind).
+                try:
+                    self.memory.lease("device", nbytes, self.owner,
+                                      wait=True,
+                                      timeout=self.policy.op_deadline_s,
+                                      cancelled=lambda: self._stop)
+                except BaseException as e:
+                    self.memory.release("host", nbytes, self.owner)
+                    self._fail(i, e)
+                    return
+                with self.tracer.span("h2d", cat="prefetch",
+                                      track="prefetcher", layer=i):
+                    staged = jax.tree.map(jnp.asarray, staged)
+                self.memory.release("host", nbytes, self.owner)
+                tier = "device"
             self.tracer.span_event(f"layer_read[{i}]", t0, t1,
                                    cat="prefetch", track="prefetcher",
                                    nbytes=nbytes)
             with self._cv:
                 self._inflight.discard(i)
-                if i not in self._buf:
-                    self._buf[i] = (staged, nbytes)
+                if i not in self._buf and not self._stop:
+                    self._buf[i] = (staged, nbytes, tier)
                     self._resident += nbytes
                     self._peak = max(self._peak, self._resident)
+                else:   # duplicate stage / raced close: hand bytes back
+                    self.memory.release(tier, nbytes, self.owner)
                 self._read += nbytes
                 self._events.append(PrefetchEvent(i, t0, t1, nbytes))
                 self._cv.notify_all()
@@ -231,11 +284,19 @@ class LayerPrefetcher:
 
     def _release_locked(self, front: int) -> None:
         L = self.store.n_layers
+        dropped = False
         for j in list(self._buf):
             if (j - front) % L >= self.window:
-                _, nbytes = self._buf.pop(j)
+                _, nbytes, tier = self._buf.pop(j)
                 self._resident -= nbytes
+                self.memory.release(tier, nbytes, self.owner)
                 self.store.release(j)
+                dropped = True
+        if dropped:
+            self.tracer.counter(
+                "store/released_bytes",
+                getattr(self.store, "released_bytes", 0),
+                track="prefetcher")
 
     def get(self, i: int, *, timeout: Optional[float] = None) -> Params:
         """Block until layer ``i`` is staged, at most ``timeout`` seconds
@@ -279,11 +340,15 @@ class LayerPrefetcher:
 
     def stats(self) -> PrefetchStats:
         with self._cv:
+            refusals = sum(s.refusals
+                           for s in self.memory.stats().values())
             return PrefetchStats(
                 events=list(self._events), peak_resident_bytes=self._peak,
                 total_bytes_read=self._read, stall_s=self._stall,
                 layers_served=self._served, releases=self.store.released,
-                retries=self.health.retries)
+                retries=self.health.retries,
+                released_bytes=getattr(self.store, "released_bytes", 0),
+                budget_refusals=refusals)
 
     def close(self, timeout: float = 5.0) -> bool:
         """Stop the worker; returns True once it has actually joined.
@@ -291,11 +356,16 @@ class LayerPrefetcher:
         Idempotent: a second call re-checks the join without re-stopping.
         A thread that fails to join within ``timeout`` is reported as a
         stall (logged with the health record) and left daemonized; the
-        object is unusable either way.
+        object is unusable either way. Staged buffers hand their leases
+        back so a shared budget balances after shutdown.
         """
         with self._cv:
             self._closed = True
             self._stop = True
+            for j in list(self._buf):
+                _, nbytes, tier = self._buf.pop(j)
+                self._resident -= nbytes
+                self.memory.release(tier, nbytes, self.owner)
             self._cv.notify_all()
         self._thread.join(timeout=timeout)
         if self._thread.is_alive():
@@ -317,12 +387,14 @@ class StreamingParamSource(ParamSource):
 
     def __init__(self, store: ParamStore, *, window: int = 4,
                  device_put: bool = True,
-                 policy: Optional[IOPolicy] = None, tracer=None):
+                 policy: Optional[IOPolicy] = None, tracer=None,
+                 memory: Optional[TierManager] = None):
         self.store = store
         self.n_layers = store.n_layers
         self.prefetcher = LayerPrefetcher(store, window=window,
                                           device_put=device_put,
-                                          policy=policy, tracer=tracer)
+                                          policy=policy, tracer=tracer,
+                                          memory=memory)
         head = store.head()
         if device_put:
             head = jax.tree.map(jnp.asarray, head)
@@ -405,7 +477,9 @@ class RingBankPrefetcher:
 
     def __init__(self, store: ParamStore, cfg, mesh, plan, *,
                  bank_specs, depth: int = 2,
-                 policy: Optional[IOPolicy] = None, tracer=None):
+                 policy: Optional[IOPolicy] = None, tracer=None,
+                 memory: Optional[TierManager] = None,
+                 owner: str = "weights"):
         from . import serve as RS
 
         self.store = store
@@ -413,6 +487,9 @@ class RingBankPrefetcher:
         self.depth = max(depth, 1)
         self.policy = policy or IOPolicy()
         self.tracer = tracer or NULL_TRACER
+        self.memory = memory if memory is not None \
+            else TierManager(tracer=tracer, name="ring-prefetch-memory")
+        self.owner = owner
         self.health = WorkerHealth(name="RingBankPrefetcher")
         self._sharding = jax.tree.map(
             lambda s: jax.sharding.NamedSharding(mesh, s), bank_specs)
@@ -430,6 +507,7 @@ class RingBankPrefetcher:
         self._zero = None                 # cached zero layer (padding rows)
         self._staged: Dict[int, Params] = {}
         self._banks: Dict[int, Any] = {}
+        self._bank_nbytes: Dict[int, int] = {}
         self._cv = threading.Condition()
         self._stop = False
         self._closed = False
@@ -468,12 +546,23 @@ class RingBankPrefetcher:
             return self._zero
         staged = self._staged.get(layer)
         if staged is None:
+            # lease the manifest upper bound before reading, shrink to
+            # the packed bytes actually staged (v2 stores)
+            est = self.store.layer_nbytes
+            self.memory.lease("host", est, self.owner, wait=True,
+                              timeout=self.policy.op_deadline_s,
+                              cancelled=lambda: self._stop)
             t0 = clock()
-            staged = self.policy.run(
-                f"layer_read[{layer}]", lambda: self._read_np(layer),
-                reopen=lambda: self._reopen(layer), health=self.health)
+            try:
+                staged = self.policy.run(
+                    f"layer_read[{layer}]", lambda: self._read_np(layer),
+                    reopen=lambda: self._reopen(layer), health=self.health)
+            except BaseException:
+                self.memory.release("host", est, self.owner)
+                raise
             t1 = clock()
             nbytes = sum(a.nbytes for a in jax.tree.leaves(staged))
+            self.memory.resize("host", self.owner, est, nbytes)
             self.tracer.span_event(f"layer_read[{layer}]", t0, t1,
                                    cat="prefetch",
                                    track="ring-prefetcher",
@@ -492,7 +581,20 @@ class RingBankPrefetcher:
         with self.tracer.span(f"bank_h2d[{t}]", cat="prefetch",
                               track="ring-prefetcher"):
             bank_np = jax.tree.map(lambda *xs: np.stack(xs, 0), *layers)
-            return jax.device_put(bank_np, self._sharding)
+            nbytes = sum(a.nbytes for a in jax.tree.leaves(bank_np))
+            # device bytes for the stacked bank: leased before the put,
+            # released when done(t) drops the bank behind the front
+            self.memory.lease("device", nbytes, self.owner, wait=True,
+                              timeout=self.policy.op_deadline_s,
+                              cancelled=lambda: self._stop)
+            try:
+                bank = jax.device_put(bank_np, self._sharding)
+            except BaseException:
+                self.memory.release("device", nbytes, self.owner)
+                raise
+            with self._cv:
+                self._bank_nbytes[t] = nbytes
+            return bank
 
     def _worker(self) -> None:
         while True:
@@ -530,10 +632,25 @@ class RingBankPrefetcher:
     def begin_pass(self) -> None:
         """Enqueue the whole step schedule (banks build ``depth`` ahead)."""
         with self._cv:
-            self._banks.clear()
+            self._drain_locked(banks_only=True)
             self._front = -1
             self._want.extend(range(self.n_steps))
             self._cv.notify_all()
+
+    def _drain_locked(self, *, banks_only: bool = False) -> None:
+        """Hand every live lease back (abandoned pass / shutdown)."""
+        for t in list(self._banks):
+            self._banks.pop(t)
+            self.memory.release("device", self._bank_nbytes.pop(t, 0),
+                                self.owner)
+        if banks_only:
+            return
+        for layer in list(self._staged):
+            staged = self._staged.pop(layer)
+            nbytes = sum(a.nbytes for a in jax.tree.leaves(staged))
+            self._resident -= nbytes
+            self.memory.release("host", nbytes, self.owner)
+            self.store.release(layer)
 
     def get(self, t: int, *, timeout: Optional[float] = None):
         if timeout is None:
@@ -570,13 +687,18 @@ class RingBankPrefetcher:
         """Step ``t`` consumed: drop its bank and release layers whose last
         use in this pass was step ``t`` (behind the compute front)."""
         with self._cv:
-            self._banks.pop(t, None)
+            if self._banks.pop(t, None) is not None:
+                self.memory.release("device",
+                                    self._bank_nbytes.pop(t, 0),
+                                    self.owner)
             self._front = max(self._front, t)
             for layer, last in self._last_use.items():
                 if last == t and layer in self._staged:
                     staged = self._staged.pop(layer)
-                    self._resident -= sum(
+                    nbytes = sum(
                         a.nbytes for a in jax.tree.leaves(staged))
+                    self._resident -= nbytes
+                    self.memory.release("host", nbytes, self.owner)
                     self.store.release(layer)
             self._cv.notify_all()
 
@@ -587,7 +709,10 @@ class RingBankPrefetcher:
                 total_bytes_read=self._read, stall_s=self._stall,
                 layers_served=len(self._events),
                 releases=self.store.released,
-                retries=self.health.retries)
+                retries=self.health.retries,
+                released_bytes=getattr(self.store, "released_bytes", 0),
+                budget_refusals=sum(
+                    s.refusals for s in self.memory.stats().values()))
 
     def close(self, timeout: float = 5.0) -> bool:
         """Stop the worker (idempotent); True once it has joined, False
@@ -597,6 +722,9 @@ class RingBankPrefetcher:
             self._stop = True
             self._cv.notify_all()
         self._thread.join(timeout=timeout)
+        if not self._thread.is_alive():
+            with self._cv:
+                self._drain_locked()
         if self._thread.is_alive():
             self.health.stalled = True
             log.error("RingBankPrefetcher.close: worker failed to join "
@@ -622,7 +750,8 @@ class StreamingRingDriver:
     def __init__(self, cfg, mesh, plan, store: ParamStore, *,
                  head_params: Params, cache_like, n_tokens: int = 1,
                  prefetch_depth: int = 2,
-                 policy: Optional[IOPolicy] = None, tracer=None):
+                 policy: Optional[IOPolicy] = None, tracer=None,
+                 memory: Optional[TierManager] = None):
         from . import serve as RS
 
         self.cfg = cfg
@@ -639,7 +768,8 @@ class StreamingRingDriver:
         self.prefetch = RingBankPrefetcher(store, cfg, mesh, plan,
                                            bank_specs=bank_specs,
                                            depth=prefetch_depth,
-                                           policy=policy, tracer=tracer)
+                                           policy=policy, tracer=tracer,
+                                           memory=memory)
         self.n_steps = self.prefetch.n_steps
         self._token_idx = 0
 
