@@ -17,7 +17,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 SECTIONS = ("table3", "table4", "table6", "fig2", "fig8", "halda",
             "kernels", "spec_decode", "streaming", "streaming_q4",
             "paged_kv", "tiered_memory", "fault_recovery",
-            "observability", "roofline")
+            "observability", "serving_load", "roofline")
 
 
 def _run_section(name: str, fn) -> None:
@@ -75,6 +75,9 @@ def main(argv=None) -> int:
     if "observability" in wanted:
         from . import observability
         _run_section("observability", observability.main)
+    if "serving_load" in wanted:
+        from . import serving_load
+        _run_section("serving_load", serving_load.main)
     if "roofline" in wanted:
         from . import roofline
         try:

@@ -1,0 +1,300 @@
+"""Serving-load benchmark: SLO-gated Poisson/bursty traces through the
+paged engine.
+
+Attaches a number to the "heavy traffic" claim: seeded arrival traces
+with mixed prompt lengths replay through ``ContinuousBatcher`` over the
+paged KV cache with a ``MetricsRegistry`` recording every request's
+lifecycle, and the run gates on:
+
+  * **SLO** — p50/p99 TTFT and TPOT from the streaming histograms stay
+    under the smoke-scale bounds for both the Poisson and the bursty
+    trace (TTFT includes real queue wait: arrivals are replayed against
+    the wall clock, so a burst that floods every slot pays its wait);
+  * **zero OOM** — every submitted request is accounted for: finished,
+    or shed with a classified code (``shed_capacity`` /
+    ``deferred_ttl_expired``); an unclassified rejection or an exception
+    is a failure. An overload scenario with a deliberately small pool
+    proves the classification paths fire;
+  * **histogram agreement** — the log-bucketed histogram quantiles match
+    exact numpy quantiles of the retained request log within one bucket
+    of relative error (growth factor 1.1) — the no-sample-retention
+    percentiles can be trusted;
+  * **metrics overhead** — the metered engine's decode wall time vs the
+    same engine with ``metrics=None`` is reported (the hard <1% hot-path
+    gate lives in ``BENCH_observability.json``, whose loop takes no
+    registry — these guards are ``if metrics is None`` branches).
+
+Emits ``BENCH_serving_load.json`` via ``benchmarks/run.py`` or directly
+(``python -m benchmarks.serving_load``; the CLI run exits nonzero on any
+failed gate — it IS the CI step).
+"""
+from __future__ import annotations
+
+import math
+import time
+
+import numpy as np
+
+from .common import header, row
+
+ARCH = "qwen2.5-14b"
+B = 4               # decode slots
+CTX = 64
+PAGE_TOKENS = 8
+LENGTHS = (8, 16, 32)   # mixed prompt lengths (few distinct jit shapes)
+MAX_NEW = 6
+N_REQ = 12
+RATE_PER_S = 4.0        # Poisson arrival rate (CPU smoke oversubscribes)
+BURST = 2 * B           # bursty trace: 2x the slot count at one instant
+BURST_GAP_S = 0.4
+OVERHEAD_REPS = 2
+
+# generous CPU-smoke SLOs (a reduced-config decode step is ~1 s on a CI
+# runner and TTFT includes queue wait under deliberate oversubscription):
+# the gate catches pathological regressions — stuck admission, quadratic
+# step time, unbounded queues — not kernel-level drift
+SLO = {"p50_ttft_s": 30.0, "p99_ttft_s": 90.0,
+       "p50_tpot_s": 2.0, "p99_tpot_s": 5.0}
+# one log-bucket of relative error (the histogram's contract) + float slack
+AGREEMENT_FACTOR = 1.1 * 1.02
+
+
+def _build(params, cfg, *, metrics=None, n_pages=None):
+    from repro.runtime.kvcache import make_paged_engine
+
+    if n_pages is None:
+        n_pages = 2 + B * (-(-CTX // PAGE_TOKENS))
+    return make_paged_engine(params, cfg, B, CTX, n_pages=n_pages,
+                             page_tokens=PAGE_TOKENS, offload=False,
+                             metrics=metrics)
+
+
+def _warmup(params, cfg):
+    """Compile every prefill shape + the decode step outside the clock."""
+    from repro.data.pipeline import Request
+
+    eng, kv = _build(params, cfg)
+    reqs = [Request(uid=900 + i, prompt=np.full(s, 7, np.int32),
+                    max_new_tokens=2, arrival_s=0.0)
+            for i, s in enumerate(LENGTHS)]
+    eng.run(kv.init_cache(), reqs)
+    kv.close()
+
+
+def _exact_quantiles(traces, field, qs):
+    vals = np.array([getattr(t, field) for t in traces
+                     if getattr(t, field) is not None])
+    if vals.size == 0:
+        return {q: math.nan for q in qs}
+    return {q: float(np.quantile(vals, q, method="inverted_cdf"))
+            for q in qs}
+
+
+def _agreement(hist_v, exact_v):
+    """Relative agreement ratio (1.0 = exact), NaN-safe."""
+    if not (math.isfinite(hist_v) and math.isfinite(exact_v)):
+        return math.inf
+    if exact_v <= 0.0:
+        return 1.0 if hist_v <= 0.0 else math.inf
+    return max(hist_v / exact_v, exact_v / hist_v)
+
+
+def _replay(params, cfg, reqs, label):
+    """Replay one arrival trace with metrics on; returns the scenario
+    report dict (percentiles, gates) and the registry."""
+    from repro.runtime.metrics import (MetricsRegistry,
+                                       validate_metrics_snapshot)
+
+    reg = MetricsRegistry()
+    eng, kv = _build(params, cfg, metrics=reg)
+    t0 = time.perf_counter()
+    fin, steps = eng.run(kv.init_cache(), reqs, respect_arrivals=True)
+    wall = time.perf_counter() - t0
+    kv.close()
+
+    snap = reg.snapshot()
+    validate_metrics_snapshot(
+        snap, require=["request/ttft_s", "request/queue_wait_s",
+                       "decode/step_s", "requests/finished",
+                       "kv/pages_active", "slots/active"])
+    counters = snap["counters"]
+    shed = [r for r in eng.rejected]
+    accounted = len(fin) + len(shed)
+    classified = all(r.code in ("shed_capacity", "deferred_ttl_expired")
+                     for r in shed)
+    oom_free = (accounted == len(reqs)) and classified
+
+    pct = {}
+    agreement = {}
+    traces = list(reg.request_log)
+    for name, field in (("ttft", "ttft_s"), ("tpot", "tpot_s")):
+        h = reg.histogram(f"request/{field}")
+        exact = _exact_quantiles(traces, field, (0.5, 0.99))
+        for q in (0.5, 0.99):
+            key = f"p{int(q * 100)}_{name}_s"
+            pct[key] = h.quantile(q)
+            pct[f"exact_{key}"] = exact[q]
+            agreement[key] = _agreement(pct[key], exact[q])
+    slo_ok = all(pct[k] <= bound for k, bound in SLO.items())
+    agreement_ok = all(a <= AGREEMENT_FACTOR
+                       for a in agreement.values())
+
+    header(f"serving_load: {label}")
+    row(f"{label}.requests", len(reqs))
+    row(f"{label}.finished", len(fin))
+    row(f"{label}.shed", len(shed))
+    row(f"{label}.steps", steps)
+    row(f"{label}.wall_s", f"{wall:.3f}")
+    for k in sorted(pct):
+        row(f"{label}.{k}", f"{pct[k]:.4f}")
+    row(f"{label}.max_agreement_factor",
+        f"{max(agreement.values()):.4f}",
+        f"bound {AGREEMENT_FACTOR:.3f}")
+
+    report = {
+        "requests": len(reqs), "finished": len(fin), "shed": len(shed),
+        "steps": steps, "wall_s": wall,
+        "tokens_generated": counters.get("tokens/generated", 0),
+        "restored": counters.get("requests/restored", 0),
+        **{k: v for k, v in pct.items()},
+        "agreement": agreement,
+        "slo": dict(SLO), "slo_ok": slo_ok,
+        "agreement_ok": agreement_ok, "oom_free": oom_free,
+    }
+    return report, reg
+
+
+def _overload(params, cfg):
+    """Deliberately small pool: both shed classifications must fire as
+    counters, and nothing may escape as an exception (zero OOM means
+    admission control, not failures)."""
+    from repro.data.pipeline import Request
+    from repro.runtime.metrics import MetricsRegistry
+
+    rng = np.random.default_rng(5)
+
+    def req(uid, plen, max_new):
+        return Request(uid=uid,
+                       prompt=rng.integers(3, cfg.vocab, plen,
+                                           dtype=np.int32),
+                       max_new_tokens=max_new, arrival_s=0.0)
+
+    # capacity shed: request 1 can never fit the 6-page pool (needs 6
+    # usable pages for 30 prompt + 4 new) while request 0 decodes
+    reg = MetricsRegistry()
+    eng, kv = _build(params, cfg, metrics=reg, n_pages=6)
+    fin, _ = eng.run(kv.init_cache(), [req(0, 8, 8), req(1, 30, 4)])
+    kv.close()
+    cap = reg.counter("requests/rejected", reason="shed_capacity").value
+    cap_ok = (cap == 1 and len(fin) == 1
+              and eng.rejected[0].code == "shed_capacity")
+
+    # TTL shed: request 1 fits an empty pool (3 of 5 usable pages) but
+    # starves behind the hog's 4-page worst-case reservation
+    reg2 = MetricsRegistry()
+    eng2, kv2 = _build(params, cfg, metrics=reg2, n_pages=6)
+    fin2, _ = eng2.run(kv2.init_cache(), [req(0, 8, 12), req(1, 8, 8)],
+                       admit_patience=5)
+    kv2.close()
+    ttl = reg2.counter("requests/rejected",
+                       reason="deferred_ttl_expired").value
+    ttl_ok = (ttl == 1 and len(fin2) == 1
+              and eng2.rejected[0].code == "deferred_ttl_expired")
+
+    header("serving_load: overload classification")
+    row("overload.shed_capacity", cap, "want 1")
+    row("overload.deferred_ttl_expired", ttl, "want 1")
+    return {"shed_capacity": cap, "deferred_ttl_expired": ttl,
+            "classified_ok": cap_ok and ttl_ok}
+
+
+def _overhead(params, cfg, reqs):
+    """Metered vs unmetered decode wall time (pooled minima, report
+    only — the hard hot-path gate is BENCH_observability's unmetered
+    loop)."""
+    from repro.runtime.metrics import MetricsRegistry
+
+    def one(metered):
+        reg = MetricsRegistry() if metered else None
+        eng, kv = _build(params, cfg, metrics=reg)
+        t0 = time.perf_counter()
+        eng.run(kv.init_cache(), reqs)       # back-to-back, no arrivals
+        wall = time.perf_counter() - t0
+        kv.close()
+        return wall
+
+    base, metered = [], []
+    for _ in range(OVERHEAD_REPS):           # interleaved A/B
+        base.append(one(False))
+        metered.append(one(True))
+    ratio = min(metered) / min(base)
+    header("serving_load: metrics overhead")
+    row("overhead.unmetered_s", f"{min(base):.3f}")
+    row("overhead.metered_s", f"{min(metered):.3f}")
+    row("overhead.ratio", f"{ratio:.3f}", "report only")
+    return {"unmetered_s": min(base), "metered_s": min(metered),
+            "ratio": ratio}
+
+
+def main() -> dict:
+    import jax
+
+    from repro.configs import get_config
+    from repro.data.pipeline import RequestGenerator
+    from repro.models import init_params
+
+    cfg = get_config(ARCH).reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    _warmup(params, cfg)
+
+    gen_p = RequestGenerator(cfg.vocab, rate_per_s=RATE_PER_S,
+                             lengths=LENGTHS, max_new=MAX_NEW, seed=11)
+    poisson_reqs = gen_p.generate(N_REQ)
+    gen_b = RequestGenerator(cfg.vocab, lengths=LENGTHS,
+                             max_new=MAX_NEW, seed=13)
+    bursty_reqs = gen_b.generate(N_REQ, pattern="bursty", burst=BURST,
+                                 burst_gap_s=BURST_GAP_S)
+
+    poisson, _ = _replay(params, cfg, poisson_reqs, "poisson")
+    bursty, _ = _replay(params, cfg, bursty_reqs, "bursty")
+    overload = _overload(params, cfg)
+    overhead = _overhead(params, cfg, poisson_reqs)
+
+    gates = {
+        "poisson_slo": poisson["slo_ok"],
+        "poisson_oom_free": poisson["oom_free"],
+        "poisson_hist_agreement": poisson["agreement_ok"],
+        "bursty_slo": bursty["slo_ok"],
+        "bursty_oom_free": bursty["oom_free"],
+        "bursty_hist_agreement": bursty["agreement_ok"],
+        "sheds_classified": overload["classified_ok"],
+    }
+    header("serving_load: gates")
+    for name, ok in gates.items():
+        row(f"gate.{name}", "PASS" if ok else "FAIL")
+
+    return {
+        "arch": ARCH, "slots": B, "ctx": CTX,
+        "page_tokens": PAGE_TOKENS, "lengths": list(LENGTHS),
+        "max_new": MAX_NEW, "n_requests": N_REQ,
+        "rate_per_s": RATE_PER_S, "burst": BURST,
+        "burst_gap_s": BURST_GAP_S,
+        "poisson": poisson, "bursty": bursty,
+        "overload": overload, "metrics_overhead": overhead,
+        "gates": gates,
+    }
+
+
+if __name__ == "__main__":
+    import sys
+
+    from . import common
+
+    payload = main()
+    print(f"# wrote {common.write_bench_json('serving_load', payload)}")
+    # the CLI run IS the gate (CI's serving_load step)
+    failed = [k for k, ok in payload["gates"].items() if not ok]
+    if failed:
+        print(f"# GATE FAILED: {', '.join(failed)}", file=sys.stderr)
+        sys.exit(1)
+    print("# all serving_load gates passed")

@@ -92,23 +92,46 @@ class Request:
 
 
 class RequestGenerator:
-    """Poisson arrivals of variable-length prompts (serving benchmarks)."""
+    """Seeded arrival traces of variable-length prompts (serving
+    benchmarks): Poisson (default) or bursty arrivals, prompt lengths
+    drawn from a range or a discrete mix.
+
+    ``lengths`` replaces the ``prompt_len`` range with a discrete choice
+    set (e.g. ``(8, 16, 48)``) — serving benchmarks use this to mix
+    short/long prompts while keeping the set of jitted prefill shapes
+    small. ``pattern="bursty"`` releases requests in back-to-back groups
+    of ``burst`` separated by ``burst_gap_s`` of silence — the adversarial
+    arrival process for admission control (a Poisson trace rarely fills
+    every slot at once; a burst always does).
+    """
 
     def __init__(self, vocab: int, *, rate_per_s: float = 4.0,
                  prompt_len: Tuple[int, int] = (16, 256),
-                 max_new: int = 64, seed: int = 0):
+                 max_new: int = 64, seed: int = 0,
+                 lengths: Optional[Tuple[int, ...]] = None):
         self.vocab = vocab
         self.rate = rate_per_s
         self.prompt_len = prompt_len
+        self.lengths = lengths
         self.max_new = max_new
         self.rng = np.random.default_rng(seed)
 
-    def generate(self, n: int) -> List[Request]:
+    def generate(self, n: int, *, pattern: str = "poisson",
+                 burst: int = 4, burst_gap_s: float = 0.25
+                 ) -> List[Request]:
+        if pattern not in ("poisson", "bursty"):
+            raise ValueError(f"unknown arrival pattern {pattern!r}")
         t = 0.0
         out = []
         for i in range(n):
-            t += self.rng.exponential(1.0 / self.rate)
-            length = int(self.rng.integers(*self.prompt_len))
+            if pattern == "poisson":
+                t += self.rng.exponential(1.0 / self.rate)
+            elif i > 0 and i % burst == 0:
+                t += burst_gap_s       # whole burst shares one instant
+            if self.lengths is not None:
+                length = int(self.rng.choice(self.lengths))
+            else:
+                length = int(self.rng.integers(*self.prompt_len))
             prompt = self.rng.integers(3, self.vocab, size=length,
                                        dtype=np.int32)
             lo = max(1, min(8, self.max_new))

@@ -9,7 +9,6 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import time
 
 import jax
 import jax.numpy as jnp
@@ -19,6 +18,7 @@ from ..configs import get_config
 from ..data import RequestGenerator
 from ..models import init_cache, init_params, prefill
 from ..runtime import serve as RS
+from ..runtime.telemetry import clock
 from .mesh import make_debug_mesh, make_production_mesh
 
 
@@ -103,12 +103,23 @@ def main(argv=None) -> int:
                          "open it at https://ui.perfetto.dev")
     ap.add_argument("--metrics-interval", type=int, default=0,
                     metavar="N",
-                    help="with --trace: print a stall-attribution "
-                         "summary line every N decode tokens")
+                    help="print a rolling metrics line every N decode "
+                         "tokens: stall attribution (with --trace) and "
+                         "request/step percentiles (with --metrics-out)")
+    ap.add_argument("--metrics-out", default=None, metavar="OUT.json",
+                    help="collect serving metrics (request lifecycle "
+                         "percentiles, engine counters, subsystem "
+                         "gauges) in a MetricsRegistry and write the "
+                         "JSON snapshot here — check it with `python -m "
+                         "repro.runtime.metrics --validate OUT.json`")
     args = ap.parse_args(argv)
 
     from ..runtime.telemetry import NULL_TRACER, Tracer
     tracer = Tracer() if args.trace else NULL_TRACER
+    metrics = None
+    if args.metrics_out:
+        from ..runtime.metrics import MetricsRegistry
+        metrics = MetricsRegistry()
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -139,11 +150,13 @@ def main(argv=None) -> int:
 
     # prefill on the plain path (batch prompts, same length)
     cache = init_cache(cfg, B, args.ctx, dtype=jnp.float32)
-    t0 = time.time()
+    t0 = clock()
     logits, cache = prefill(params, cfg, prompts, cache)
     nxt = jnp.argmax(logits[:, -1], -1)[:, None]
-    ttft = time.time() - t0
+    ttft = clock() - t0
     print(f"prefill: {B}×{args.prompt_len} tokens in {ttft*1e3:.0f} ms")
+    if metrics is not None:
+        metrics.observe("request/ttft_s", ttft)
 
     if ring:
         plan = RS.RingPlan.make(cfg, stages, k=args.ring_k)
@@ -155,8 +168,9 @@ def main(argv=None) -> int:
         step = RS.build_ring_serve_step(cfg, mesh, plan)(pr, cache)
         ln = cache["len"]
         out_tokens = [nxt]
-        t0 = time.time()
+        t0 = clock()
         for t in range(args.new_tokens):
+            ts = clock()
             with tracer.token_step(t, track="decode"):
                 with tracer.phase("compute"):
                     logits, cache = step(nxt, ln, pr, cache)
@@ -164,9 +178,12 @@ def main(argv=None) -> int:
                     nxt = jnp.argmax(logits[:, 0, :cfg.vocab],
                                      -1)[:, None]
                     nxt = jax.block_until_ready(nxt)
+            if metrics is not None:
+                metrics.observe("decode/step_s", clock() - ts)
+                metrics.inc("tokens/generated", B)
             out_tokens.append(nxt)
-            _metrics_tick(tracer, args, t)
-        dt = time.time() - t0
+            _metrics_tick(tracer, args, t, metrics)
+        dt = clock() - t0
         print(f"ring decode (k={plan.k}, w={plan.w}, M={stages}, TP={tp}): "
               f"{args.new_tokens} tokens × {B} seqs in {dt:.2f}s "
               f"-> {dt / args.new_tokens * 1e3:.1f} ms/token/batch")
@@ -179,22 +196,22 @@ def main(argv=None) -> int:
             logits, cache = vstep(vt, ln, pr, cache)   # compile + warm
             jax.block_until_ready(logits)
             iters = 3
-            t0 = time.time()
+            t0 = clock()
             for _ in range(iters):
                 logits, cache = vstep(vt, ln, pr, cache)
                 jax.block_until_ready(logits)
-            dtv = (time.time() - t0) / iters
+            dtv = (clock() - t0) / iters
             per_tok = dt / args.new_tokens
             print(f"verify pass (T={T}): {dtv * 1e3:.1f} ms vs "
                   f"{T}×{per_tok * 1e3:.1f} ms single steps -> "
                   f"amortization {T * per_tok / dtv:.2f}x")
     else:
         step = RS.gspmd_decode_step(cfg, mesh, params, cache)
-        t0 = time.time()
+        t0 = clock()
         for t in range(args.new_tokens):
             logits, cache = step(params, cache, nxt)
             nxt = jnp.argmax(logits[:, 0], -1)[:, None]
-        dt = time.time() - t0
+        dt = clock() - t0
         print(f"gspmd decode: {args.new_tokens} × {B} in {dt:.2f}s")
 
     if args.stream_window > 0 and cfg.family in ("dense", "moe", "vlm",
@@ -208,7 +225,8 @@ def main(argv=None) -> int:
         elif cfg.kv_dtype == "int8":
             print("paged-kv: int8 KV quantization not paged yet — skipped")
         else:
-            _paged_smoke(cfg, params, args, tracer=tracer)
+            _paged_smoke(cfg, params, args, tracer=tracer,
+                         metrics=metrics)
     if args.chaos != "none":
         if cfg.family not in ("dense", "moe", "vlm", "ssm"):
             print(f"chaos: unsupported family {cfg.family} — skipped")
@@ -226,18 +244,47 @@ def main(argv=None) -> int:
         print(f"trace: {len(tracer.events())} events on "
               f"{len(tracer.tracks())} tracks -> {args.trace} "
               f"(open at https://ui.perfetto.dev)")
+    if metrics is not None:
+        from ..runtime.metrics import validate_metrics_snapshot
+        path = metrics.export_json(args.metrics_out)
+        info = validate_metrics_snapshot(path)
+        print(f"metrics: {info['counters']} counters, "
+              f"{info['gauges']} gauges, {info['histograms']} "
+              f"histograms -> {path}")
+        print(_percentile_line(metrics) or "metrics: no samples yet")
     return 0
 
 
-def _metrics_tick(tracer, args, t: int) -> None:
-    """Print a periodic stall-attribution line (--metrics-interval)."""
+def _percentile_line(metrics) -> str:
+    """One line of request/step percentiles for the console."""
+    pcts = metrics.percentile_summary()
+    parts = []
+    for key, label in (("request/ttft_s", "ttft"),
+                       ("request/tpot_s", "tpot"),
+                       ("request/queue_wait_s", "queue"),
+                       ("decode/step_s", "step")):
+        if f"{key}/p50" in pcts:
+            parts.append(f"{label} p50/p99 "
+                         f"{pcts[f'{key}/p50'] * 1e3:.1f}/"
+                         f"{pcts[f'{key}/p99'] * 1e3:.1f} ms")
+    return "; ".join(parts)
+
+
+def _metrics_tick(tracer, args, t: int, metrics=None) -> None:
+    """Print a periodic rolling line (--metrics-interval): stall
+    attribution when tracing, request/step percentiles when metering."""
     n = args.metrics_interval
-    if not args.trace or n <= 0 or (t + 1) % n != 0:
+    if n <= 0 or (t + 1) % n != 0:
         return
-    from ..runtime.telemetry import format_summary
-    summ = tracer.summary(last_n=n)
-    if summ.get("n"):
-        print(f"[token {t + 1}] {format_summary(summ)}")
+    if args.trace:
+        from ..runtime.telemetry import format_summary
+        summ = tracer.summary(last_n=n)
+        if summ.get("n"):
+            print(f"[token {t + 1}] {format_summary(summ)}")
+    if metrics is not None:
+        line = _percentile_line(metrics)
+        if line:
+            print(f"[token {t + 1}] {line}")
 
 
 def _io_policy(args):
@@ -359,7 +406,7 @@ def _chaos_smoke(cfg, params, prompts, args, *, ring_ctx=None,
         shutil.rmtree(sdir, ignore_errors=True)
 
 
-def _paged_smoke(cfg, params, args, *, tracer=None) -> None:
+def _paged_smoke(cfg, params, args, *, tracer=None, metrics=None) -> None:
     """Paged-KV parity smoke: dense vs paged continuous batching."""
     import jax.numpy as jnp
 
@@ -375,17 +422,18 @@ def _paged_smoke(cfg, params, args, *, tracer=None) -> None:
     reqs = gen.generate(2 * B)
 
     eng_d = make_dense_engine(params, cfg, B, ctx)
-    t0 = time.time()
+    t0 = clock()
     fin_d, _ = eng_d.run(init_cache(cfg, B, ctx, dtype=jnp.float32), reqs)
-    t_dense = time.time() - t0
+    t_dense = clock() - t0
 
     page_tokens = 8
     n_pages = 2 + B * (-(-ctx // page_tokens))
     eng_p, kv = make_paged_engine(params, cfg, B, ctx, n_pages=n_pages,
-                                  page_tokens=page_tokens, tracer=tracer)
-    t0 = time.time()
+                                  page_tokens=page_tokens, tracer=tracer,
+                                  metrics=metrics)
+    t0 = clock()
     fin_p, _ = eng_p.run(kv.init_cache(), reqs)
-    t_paged = time.time() - t0
+    t_paged = clock() - t0
     st = kv.stats()
     kv.close()
 
@@ -551,7 +599,7 @@ def _stream_smoke(cfg, params, prompts, args, *, ring_ctx=None,
             c_s = init_cache(cfg, B, args.ctx, dtype=jnp.float32)
             lg, c_s = prefill(params, cfg, prompts, c_s)
             tok = jnp.argmax(lg[:, -1], -1)[:, None]
-            t0 = time.time()
+            t0 = clock()
             for t in range(args.new_tokens):
                 with tracer.token_step(t, track="decode",
                                        name=f"stream_token[{t}]"):
@@ -561,7 +609,7 @@ def _stream_smoke(cfg, params, prompts, args, *, ring_ctx=None,
                         tok = jnp.argmax(lg[:, 0], -1)[:, None]
                         tok = _jax.block_until_ready(tok)
                 _metrics_tick(tracer, args, t)
-            dt = time.time() - t0
+            dt = clock() - t0
             st = src.stats()
         label = "" if args.store_quant == "none" \
             else f", store={args.store_quant}"
@@ -587,12 +635,12 @@ def _stream_smoke(cfg, params, prompts, args, *, ring_ctx=None,
                 policy=_io_policy(args), tracer=tracer)
             ln = c_r["len"]
             tok = jnp.zeros((B, 1), jnp.int32)
-            t0 = time.time()
+            t0 = clock()
             for _ in range(args.new_tokens):
                 logits, c_r = drv.step(tok, ln, c_r)
                 ln = ln + 1
                 tok = jnp.argmax(logits[:, 0, :cfg.vocab], -1)[:, None]
-            dt = time.time() - t0
+            dt = clock() - t0
             rst = drv.stats()
             drv.close()
             print(f"streamed ring decode (k={plan.k}, w={plan.w}, "

@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .telemetry import NULL_TRACER
+from .telemetry import NULL_TRACER, clock
 
 
 @dataclasses.dataclass
@@ -54,10 +54,15 @@ class FinishedRequest:
 class RejectedRequest:
     """A request the engine shed instead of admitting (graceful
     degradation): the pool can never hold it, or its admit starved past
-    the deferral TTL. ``reason`` is the operator-facing explanation."""
+    the deferral TTL. ``reason`` is the operator-facing explanation;
+    ``code`` is the machine-facing classification (``shed_capacity`` —
+    even an empty pool could never hold it; ``deferred_ttl_expired`` —
+    admission starved past the deferral TTL) so load benchmarks can gate
+    "zero OOM" without conflating admission control with failures."""
 
     uid: int
     reason: str
+    code: str = "shed_capacity"
 
 
 class ContinuousBatcher:
@@ -102,7 +107,8 @@ class ContinuousBatcher:
     def __init__(self, batch: int, prefill_one: Callable,
                  write_slot: Callable, decode: Callable,
                  *, eos_id: Optional[int] = None, spec=None, source=None,
-                 ctx: Optional[int] = None, kv=None, tracer=None):
+                 ctx: Optional[int] = None, kv=None, tracer=None,
+                 metrics=None):
         self.B = batch
         self.prefill_one = prefill_one
         self.write_slot = write_slot
@@ -113,10 +119,20 @@ class ContinuousBatcher:
         self.ctx = ctx
         self.kv = kv
         self.tracer = tracer or NULL_TRACER
+        self.metrics = metrics
+        self._tracker = None
+        if metrics is not None:
+            from .metrics import RequestTracker
+            self._tracker = RequestTracker(metrics)
+            metrics.add_source("engine", self.sample_gauges)
         self.slots = [SlotState() for _ in range(batch)]
         self.finished: List[FinishedRequest] = []
         self.rejected: List[RejectedRequest] = []
         self._step_idx = 0
+        self._queued_n = 0               # pending requests (gauge)
+        self._deferred_n = 0             # admits deferred on pool pressure
+        self._spec_proposed = 0
+        self._spec_accepted = 0
 
     def telemetry(self):
         """The attached tracer (NULL_TRACER when tracing is off)."""
@@ -127,6 +143,41 @@ class ContinuousBatcher:
         if self.source is not None and hasattr(self.source, "stats"):
             return self.source.stats()
         return None
+
+    def sample_gauges(self) -> Dict[str, float]:
+        """Gauge sample for ``MetricsRegistry.add_source``: batcher slot
+        occupancy, BlockPool pages + prefix-hit rate, TierManager
+        used/peak bytes, speculative acceptance, and I/O retry counts —
+        cheap field reads only (no stats() object construction)."""
+        g: Dict[str, float] = {
+            "slots/active": float(len(self.active())),
+            "slots/free": float(len(self.free_slots())),
+            "queue/pending": float(self._queued_n),
+            "queue/deferred": float(self._deferred_n),
+        }
+        if self.spec is not None:
+            g["spec/acceptance_rate"] = (
+                self._spec_accepted / max(self._spec_proposed, 1))
+        kv = self.kv
+        if kv is not None:
+            pool = kv.pool
+            g["kv/pages_active"] = float(pool.n_active)
+            g["kv/pages_free"] = float(pool.n_free)
+            g["kv/pages_cached"] = float(pool.n_cached)
+            looks = kv.prefix_hits + pool.alloc_count
+            g["kv/prefix_hit_rate"] = kv.prefix_hits / max(looks, 1)
+            offl = getattr(kv, "offloader", None)
+            if offl is not None and hasattr(offl, "health"):
+                g["io/kv_retries"] = float(offl.health.retries)
+            mem = getattr(kv, "memory", None)
+            if mem is not None:
+                for tier, st in mem.stats().items():
+                    g[f"mem/{tier}/used_bytes"] = float(st.used)
+                    g[f"mem/{tier}/peak_bytes"] = float(st.peak)
+        src = self.source
+        if src is not None and hasattr(src, "health"):
+            g["io/stream_retries"] = float(src.health.retries)
+        return g
 
     # ------------------------------------------------------------------ #
 
@@ -166,6 +217,10 @@ class ContinuousBatcher:
         if not free:
             raise RuntimeError("no free slots")
         slot = free[0]
+        tr = self._tracker
+        if tr is not None:
+            tr.submit(uid, prompt_len=len(prompt))   # no-op if already seen
+        t_admit = clock() if tr is not None else 0.0
         if self.kv is not None and session is not None \
                 and self.kv.is_parked(session):
             cache, meta, length = self.kv.restore_session(
@@ -178,6 +233,9 @@ class ContinuousBatcher:
             # empty (the token was already emitted last turn).
             self.slots[slot] = SlotState(uid=uid, remaining=max_new,
                                          generated=[], session=session)
+            if tr is not None:
+                tr.admitted(uid, restored=True)
+                tr.prefill_done(uid, clock() - t_admit)
             return cache, tokens
         if self.kv is not None:
             margin = self.spec.gamma if self.spec is not None else 0
@@ -209,6 +267,10 @@ class ContinuousBatcher:
         self.slots[slot] = SlotState(uid=uid, remaining=max_new - 1,
                                      generated=[int(first_tok)],
                                      session=session)
+        if tr is not None:
+            tr.admitted(uid)
+            tr.prefill_done(uid, clock() - t_admit)
+            tr.token(uid)                # prefill emits the first token
         return cache, tokens
 
     def _finish(self, i: int, cache):
@@ -216,6 +278,8 @@ class ContinuousBatcher:
         self.finished.append(
             FinishedRequest(uid=st.uid, tokens=st.generated,
                             proposed=st.proposed, accepted=st.accepted))
+        if self._tracker is not None:
+            self._tracker.finished(st.uid)
         self.slots[i] = SlotState()                      # free immediately
         if self.kv is not None:
             if st.session is not None and self.kv.parking and st.generated:
@@ -247,11 +311,16 @@ class ContinuousBatcher:
         their own components, and the remainder books as scheduler
         idle. Token-step records partition measured TPOT.
         """
+        t0 = clock() if self._tracker is not None else 0.0
         with self.tracer.token_step(self._step_idx, track="decode"):
             self._step_idx += 1
             if self.spec is not None:
-                return self._spec_step(cache, tokens)
-            return self._vanilla_step(cache, tokens)
+                out = self._spec_step(cache, tokens)
+            else:
+                out = self._vanilla_step(cache, tokens)
+        if self._tracker is not None:
+            self._tracker.step_done(clock() - t0)
+        return out
 
     def _vanilla_step(self, cache, tokens: jnp.ndarray):
         if self.kv is not None:
@@ -267,6 +336,8 @@ class ContinuousBatcher:
             if self.kv is not None:
                 self.kv.advance(i)
             st.generated.append(tok)
+            if self._tracker is not None:
+                self._tracker.token(st.uid)
             st.remaining -= 1
             if st.remaining <= 0 or (self.eos_id is not None
                                      and tok == self.eos_id):
@@ -307,18 +378,22 @@ class ContinuousBatcher:
             for tok in res.emitted[i, :n]:
                 tok = int(tok)
                 st.generated.append(tok)
+                if self._tracker is not None:
+                    self._tracker.token(st.uid)
                 st.remaining -= 1
                 if st.remaining <= 0 or (self.eos_id is not None
                                          and tok == self.eos_id):
                     cache = self._finish(i, cache)
                     break
         if proposed:
+            self._spec_proposed += proposed
+            self._spec_accepted += accepted
             self.tracer.counter("spec/proposed", proposed, track="decode")
             self.tracer.counter("spec/accepted", accepted, track="decode")
         return cache, tokens
 
     def run(self, cache, requests, *, max_steps: int = 10_000,
-            admit_patience: int = 256):
+            admit_patience: int = 256, respect_arrivals: bool = False):
         """Drive a request list (sorted by arrival) to completion.
 
         On the paged path a transiently exhausted pool (pages held by
@@ -329,15 +404,41 @@ class ContinuousBatcher:
         ``admit_patience`` consecutive steps is shed onto
         ``self.rejected`` with a clear "pool too small for request"
         error instead of starving the run.
+
+        ``respect_arrivals=True`` replays each request's ``arrival_s``
+        offset against the wall clock (load benchmarks): a request is
+        invisible to admission until its arrival passes, its metrics
+        ``submit`` timestamp is its arrival instant (so TTFT includes
+        real queue wait), and an idle engine sleeps until the next
+        arrival instead of burning decode steps.
         """
+        import time as _time
+
         from .kvcache import PoolExhausted
 
         tokens = jnp.zeros((self.B, 1), jnp.int32)
         pending = list(requests)
+        if respect_arrivals:
+            pending.sort(key=lambda r: getattr(r, "arrival_s", 0.0))
         deferrals: Dict[int, int] = {}
         steps = 0
+        t_start = clock()
+
+        def arrived(req):
+            return (not respect_arrivals
+                    or getattr(req, "arrival_s", 0.0)
+                    <= clock() - t_start)
+
         while (pending or self.active()) and steps < max_steps:
-            while pending and self.free_slots():
+            if self._tracker is not None:
+                for req in pending:
+                    if not arrived(req):
+                        break
+                    self._tracker.submit(
+                        req.uid,
+                        t=t_start + getattr(req, "arrival_s", 0.0),
+                        prompt_len=len(req.prompt))
+            while pending and self.free_slots() and arrived(pending[0]):
                 req = pending.pop(0)
                 try:
                     with self.tracer.span(f"admit[{req.uid}]", cat="sched",
@@ -357,10 +458,9 @@ class ContinuousBatcher:
                             req.max_new_tokens + margin):
                         # deferring cannot help: even an empty pool is
                         # too small — shed now with the classified reason
-                        self.rejected.append(RejectedRequest(
-                            uid=req.uid,
-                            reason=f"pool too small for request "
-                                   f"{req.uid}: {e}"))
+                        self._shed(req.uid, "shed_capacity",
+                                   f"pool too small for request "
+                                   f"{req.uid}: {e}")
                         self.tracer.instant(f"reject[{req.uid}]",
                                             cat="sched", track="decode",
                                             uid=req.uid,
@@ -369,12 +469,11 @@ class ContinuousBatcher:
                     n = deferrals.get(req.uid, 0) + 1
                     if n > admit_patience:
                         deferrals.pop(req.uid, None)
-                        self.rejected.append(RejectedRequest(
-                            uid=req.uid,
-                            reason=f"pool too small for request "
+                        self._shed(req.uid, "deferred_ttl_expired",
+                                   f"pool too small for request "
                                    f"{req.uid}: admission deferred "
                                    f"{n - 1} consecutive steps without "
-                                   f"a slot freeing enough pages ({e})"))
+                                   f"a slot freeing enough pages ({e})")
                         self.tracer.instant(f"reject[{req.uid}]",
                                             cat="sched", track="decode",
                                             uid=req.uid,
@@ -383,18 +482,38 @@ class ContinuousBatcher:
                     deferrals[req.uid] = n
                     pending.insert(0, req)
                     break
+            self._queued_n = len(pending)
+            self._deferred_n = len(deferrals)
             if self.active():
                 cache, tokens = self.step(cache, tokens)
+            elif respect_arrivals and pending:
+                # idle until the next arrival — a waiting engine burns
+                # neither decode steps nor the step budget
+                next_t = t_start + getattr(pending[0], "arrival_s", 0.0)
+                _time.sleep(min(max(next_t - clock(), 0.0), 0.005))
+                if self.kv is not None and self.kv.parking:
+                    self.kv.sweep_parked()
+                continue
             if self.kv is not None and self.kv.parking:
                 self.kv.sweep_parked()
+            if self.metrics is not None:
+                self.metrics.sample()
             steps += 1
+        self._queued_n = 0
+        self._deferred_n = 0
         return self.finished, steps
+
+    def _shed(self, uid: int, code: str, reason: str) -> None:
+        self.rejected.append(
+            RejectedRequest(uid=uid, reason=reason, code=code))
+        if self._tracker is not None:
+            self._tracker.rejected(uid, code, reason)
 
 
 def make_dense_engine(params, cfg, batch: int, ctx: int, *,
                       eos_id: Optional[int] = None, spec=None,
                       cache_dtype=jnp.float32,
-                      tracer=None) -> ContinuousBatcher:
+                      tracer=None, metrics=None) -> ContinuousBatcher:
     """Reference dense-cache engine wiring (prefill-one / slot-write /
     decode over ``models.decode_step``) — the single source of the
     slot-write convention, shared by the serving driver, benchmarks and
@@ -422,4 +541,4 @@ def make_dense_engine(params, cfg, batch: int, ctx: int, *,
 
     return ContinuousBatcher(batch, prefill_one, write_slot, decode,
                              eos_id=eos_id, spec=spec, ctx=ctx,
-                             tracer=tracer)
+                             tracer=tracer, metrics=metrics)

@@ -1461,7 +1461,8 @@ def make_paged_engine(params, cfg, batch: int, ctx: int, *,
                       evict_policy: str = "lru",
                       offload_quant: bool = False,
                       disk_dir: Optional[str] = None,
-                      park_idle_s: Optional[float] = None):
+                      park_idle_s: Optional[float] = None,
+                      metrics=None):
     """Build a ``ContinuousBatcher`` over a paged KV cache.
 
     Returns ``(engine, kv)``; drive it with ``engine.run(kv.init_cache(),
@@ -1493,5 +1494,5 @@ def make_paged_engine(params, cfg, batch: int, ctx: int, *,
 
     eng = ContinuousBatcher(batch, prefill_one, write_slot, decode,
                             eos_id=eos_id, spec=spec, kv=kv,
-                            tracer=tracer)
+                            tracer=tracer, metrics=metrics)
     return eng, kv

@@ -429,7 +429,8 @@ class StreamingParamSource(ParamSource):
 
 def make_streaming_engine(source: ParamSource, cfg, batch: int, ctx: int,
                           *, eos_id: Optional[int] = None, spec=None,
-                          cache_dtype=jnp.float32, tracer=None):
+                          cache_dtype=jnp.float32, tracer=None,
+                          metrics=None):
     """Build a ``ContinuousBatcher`` whose prefill/decode pull weights from
     ``source`` layer by layer (resident or streamed — same engine).
     """
@@ -456,7 +457,7 @@ def make_streaming_engine(source: ParamSource, cfg, batch: int, ctx: int,
 
     return ContinuousBatcher(batch, prefill_one, write_slot, decode,
                              eos_id=eos_id, spec=spec, source=source,
-                             ctx=ctx, tracer=tracer)
+                             ctx=ctx, tracer=tracer, metrics=metrics)
 
 
 # --------------------------------------------------------------------------- #

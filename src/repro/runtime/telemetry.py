@@ -52,6 +52,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import logging
 import threading
 import time
 from collections import deque
@@ -509,11 +510,21 @@ class Tracer:
                     "ph": "i", "s": "t", "ts": (ev.t - t0) * 1e6,
                     "pid": 1, "tid": tid(ev.track),
                     "args": dict(ev.args)})
-        return {"traceEvents": out, "displayTimeUnit": "ms"}
+        return {"traceEvents": out, "displayTimeUnit": "ms",
+                "metadata": {"evicted": self.evicted,
+                             "stalls_evicted": self.stalls_evicted,
+                             "complete": self.evicted == 0}}
 
     def export_chrome_trace(self, path: str) -> str:
+        doc = self.chrome_trace()
+        if self.evicted:
+            # a truncated trace must never pass for a complete one
+            logging.getLogger(__name__).warning(
+                "trace %s is truncated: ring evicted %d events "
+                "(%d token-step stall records) — raise Tracer(capacity=)",
+                path, self.evicted, self.stalls_evicted)
         with open(path, "w") as f:
-            json.dump(self.chrome_trace(), f)
+            json.dump(doc, f)
             f.write("\n")
         return path
 
@@ -577,7 +588,9 @@ def validate_chrome_trace(path: str,
         raise ValueError(
             f"{path}: required tracks missing: {missing} "
             f"(present: {tracks})")
-    return {"tracks": tracks, "n_events": len(events), "phases": phases}
+    evicted = int(doc.get("metadata", {}).get("evicted", 0))
+    return {"tracks": tracks, "n_events": len(events), "phases": phases,
+            "evicted": evicted}
 
 
 def _main(argv=None) -> int:
@@ -594,6 +607,9 @@ def _main(argv=None) -> int:
     print(f"{args.validate}: valid Chrome trace — "
           f"{info['n_events']} events, tracks {info['tracks']}, "
           f"phases {info['phases']}")
+    if info["evicted"]:
+        print(f"WARNING: trace is truncated — ring evicted "
+              f"{info['evicted']} events")
     return 0
 
 
