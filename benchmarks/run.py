@@ -15,7 +15,7 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 SECTIONS = ("table3", "table4", "table6", "fig2", "fig8", "halda",
-            "kernels", "spec_decode", "streaming", "streaming_q4",
+            "kernel_micro", "spec_decode", "streaming", "streaming_q4",
             "paged_kv", "tiered_memory", "fault_recovery",
             "observability", "serving_load", "roofline")
 
@@ -51,9 +51,9 @@ def main(argv=None) -> int:
     if "halda" in wanted:
         from . import halda_scaling
         _run_section("halda", halda_scaling.main)
-    if "kernels" in wanted:
+    if "kernel_micro" in wanted or "kernels" in wanted:  # old alias
         from . import kernel_micro
-        _run_section("kernels", kernel_micro.main)
+        _run_section("kernel_micro", kernel_micro.main)
     if "spec_decode" in wanted:
         from . import spec_decode
         _run_section("spec_decode", spec_decode.main)

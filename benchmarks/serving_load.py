@@ -22,7 +22,13 @@ lifecycle, and the run gates on:
   * **metrics overhead** — the metered engine's decode wall time vs the
     same engine with ``metrics=None`` is reported (the hard <1% hot-path
     gate lives in ``BENCH_observability.json``, whose loop takes no
-    registry — these guards are ``if metrics is None`` branches).
+    registry — these guards are ``if metrics is None`` branches);
+  * **chunked admit** — a long-prompt admit under active decode: chunked
+    prefill keeps the short streams' p99 TPOT within 1.3x the no-admit
+    baseline, shrinks the worst inter-token gap vs the one-shot prefill
+    stall, stays byte-identical to the unchunked streams, and the
+    measured interleave stall feeds the latency model's drift term
+    (``chunked_prefill_crosscheck``, report-only at smoke scale).
 
 Emits ``BENCH_serving_load.json`` via ``benchmarks/run.py`` or directly
 (``python -m benchmarks.serving_load``; the CLI run exits nonzero on any
@@ -49,6 +55,22 @@ BURST = 2 * B           # bursty trace: 2x the slot count at one instant
 BURST_GAP_S = 0.4
 OVERHEAD_REPS = 2
 
+# chunked-admit scenario: a long prompt lands while short requests
+# decode; chunked prefill must keep their TPOT flat where an unchunked
+# admit stalls every stream for the whole prefill
+LONG_LEN = 32           # in LENGTHS -> dense-prefill shape already warm
+SHORT_LEN = 8
+N_SHORT = B - 1         # leave one slot for the long admit
+SHORT_MAX_NEW = 48      # amortizes the admit; 8 + 48 fits CTX pages
+LONG_MAX_NEW = 4
+PREFILL_CHUNK_T = 2 * PAGE_TOKENS   # per-chunk fixed cost amortizes
+TPOT_FLAT_FACTOR = 1.3  # chunked p99 TPOT vs no-admit baseline
+# reduced-config decode steps are ~2 ms on CPU; one absolute ms of
+# jitter floor keeps the ratio gate meaningful at smoke scale (at real
+# step times the multiplicative bound dominates)
+TPOT_FLAT_SLACK_S = 1e-3
+CHUNK_REPS = 3          # interleaved A/B reps, pooled minima (GC noise)
+
 # generous CPU-smoke SLOs (a reduced-config decode step is ~1 s on a CI
 # runner and TTFT includes queue wait under deliberate oversubscription):
 # the gate catches pathological regressions — stuck admission, quadratic
@@ -59,13 +81,15 @@ SLO = {"p50_ttft_s": 30.0, "p99_ttft_s": 90.0,
 AGREEMENT_FACTOR = 1.1 * 1.02
 
 
-def _build(params, cfg, *, metrics=None, n_pages=None):
+def _build(params, cfg, *, metrics=None, n_pages=None,
+           prefill_chunk=None):
     from repro.runtime.kvcache import make_paged_engine
 
     if n_pages is None:
         n_pages = 2 + B * (-(-CTX // PAGE_TOKENS))
     return make_paged_engine(params, cfg, B, CTX, n_pages=n_pages,
                              page_tokens=PAGE_TOKENS, offload=False,
+                             prefill_chunk=prefill_chunk,
                              metrics=metrics)
 
 
@@ -236,6 +260,121 @@ def _overhead(params, cfg, reqs):
             "ratio": ratio}
 
 
+def _chunked_admit(params, cfg):
+    """Long-prompt admit under load: chunked prefill vs one-shot.
+
+    ``N_SHORT`` short requests decode while one ``LONG_LEN``-token prompt
+    is admitted into the last slot. Three runs, identical requests:
+
+      * **baseline** — shorts only on the *same* chunked-admission
+        engine: the no-admit TPOT reference (only the long admit
+        differs between baseline and chunked);
+      * **unchunked** — one-shot dense prefill (the whole-prefill stall
+        lands in a single inter-token gap of every active stream);
+      * **chunked** — page-sized chunks interleaved with decode steps.
+
+    Gates: chunked p99 TPOT (max over the short streams, pooled minima
+    over ``CHUNK_REPS`` interleaved reps) stays within
+    ``TPOT_FLAT_FACTOR`` x baseline (+ the smoke jitter floor); the worst
+    single inter-token gap (``request/max_gap_s``) stays well below the
+    unchunked run's whole-prefill stall; token streams byte-identical to
+    unchunked. The measured ``decode/interleave_stall_s`` per chunk vs
+    the per-token step term is reported through
+    :func:`repro.core.latency.chunked_prefill_crosscheck` (report-only
+    here — at smoke scale a chunk's fixed dispatch cost dwarfs a ~2 ms
+    decode step, which says nothing about the model at paper scale).
+    """
+    from repro.core.latency import chunked_prefill_crosscheck
+    from repro.data.pipeline import Request
+    from repro.runtime.metrics import MetricsRegistry
+
+    rng = np.random.default_rng(17)
+    short_uids = [100 + i for i in range(N_SHORT)]
+
+    all_reqs = [Request(uid=u,
+                        prompt=rng.integers(3, cfg.vocab, SHORT_LEN,
+                                            dtype=np.int32),
+                        max_new_tokens=SHORT_MAX_NEW, arrival_s=0.0)
+                for u in short_uids]
+    all_reqs.append(Request(uid=200,
+                            prompt=rng.integers(3, cfg.vocab, LONG_LEN,
+                                                dtype=np.int32),
+                            max_new_tokens=LONG_MAX_NEW, arrival_s=0.0))
+    shorts_only = all_reqs[:N_SHORT]
+
+    def run(request_set, *, chunk=None, warm=False):
+        reg = MetricsRegistry()
+        eng, kv = _build(params, cfg, metrics=reg, prefill_chunk=chunk)
+        fin, _ = eng.run(kv.init_cache(), request_set)
+        kv.close()
+        if warm:
+            return None
+        traces = {t.uid: t for t in reg.request_log}
+        return {"streams": {f.uid: list(f.tokens) for f in fin},
+                "tpot": max(traces[u].tpot_s for u in short_uids
+                            if traces[u].tpot_s is not None),
+                "gap": max(traces[u].max_gap_s for u in short_uids),
+                "reg": reg}
+
+    # warm the chunk-step + decode + dense-prefill shapes off the clock
+    run(all_reqs, chunk=PREFILL_CHUNK_T, warm=True)
+    run(all_reqs, warm=True)
+
+    plain = run(all_reqs)
+    base_reps, chunk_reps = [], []
+    for _ in range(CHUNK_REPS):              # interleaved A/B
+        base_reps.append(run(shorts_only, chunk=PREFILL_CHUNK_T))
+        chunk_reps.append(run(all_reqs, chunk=PREFILL_CHUNK_T))
+    base_tpot = min(r["tpot"] for r in base_reps)
+    chunk_tpot = min(r["tpot"] for r in chunk_reps)
+    chunk_gap = min(r["gap"] for r in chunk_reps)
+    chunked = chunk_reps[-1]
+
+    creg = chunked["reg"]
+    stall = creg._counters.get("decode/interleave_stall_s")
+    stall_s = stall.value if stall is not None else 0.0
+    n_chunks = int(creg.histogram("request/prefill_chunks").quantile(1.0))
+    drift = chunked_prefill_crosscheck(base_tpot, stall_s, n_chunks)
+
+    tpot_bound = TPOT_FLAT_FACTOR * base_tpot + TPOT_FLAT_SLACK_S
+    tpot_flat = chunk_tpot <= tpot_bound
+    gap_shrunk = chunk_gap < plain["gap"]
+    parity = (chunked["streams"] == plain["streams"]
+              and len(chunked["streams"]) == N_SHORT + 1)
+
+    header("serving_load: chunked admit")
+    row("chunked_admit.baseline_tpot_s", f"{base_tpot:.4f}",
+        "no-admit, same engine")
+    row("chunked_admit.unchunked_tpot_s", f"{plain['tpot']:.4f}")
+    row("chunked_admit.chunked_tpot_s", f"{chunk_tpot:.4f}",
+        f"bound {tpot_bound:.4f}")
+    row("chunked_admit.unchunked_max_gap_s", f"{plain['gap']:.4f}",
+        "whole-prefill stall in one gap")
+    row("chunked_admit.chunked_max_gap_s", f"{chunk_gap:.4f}")
+    row("chunked_admit.prefill_chunks", n_chunks)
+    row("chunked_admit.interleave_stall_s", f"{stall_s:.4f}")
+    row("chunked_admit.drift_ratio", f"{drift.ratio:.3f}",
+        "stall/chunk vs per-token step, report only")
+    row("chunked_admit.token_parity", "PASS" if parity else "FAIL")
+
+    return {
+        "long_len": LONG_LEN, "short_max_new": SHORT_MAX_NEW,
+        "prefill_chunk": PREFILL_CHUNK_T,
+        "baseline_tpot_s": base_tpot,
+        "unchunked_tpot_s": plain["tpot"],
+        "chunked_tpot_s": chunk_tpot,
+        "tpot_bound_s": tpot_bound,
+        "unchunked_max_gap_s": plain["gap"],
+        "chunked_max_gap_s": chunk_gap,
+        "prefill_chunks": n_chunks,
+        "interleave_stall_s": stall_s,
+        "interleave_drift_ratio": drift.ratio,
+        "interleave_consistent": drift.consistent,
+        "tpot_flat": tpot_flat, "gap_shrunk": gap_shrunk,
+        "token_parity": parity,
+    }
+
+
 def main() -> dict:
     import jax
 
@@ -259,6 +398,7 @@ def main() -> dict:
     bursty, _ = _replay(params, cfg, bursty_reqs, "bursty")
     overload = _overload(params, cfg)
     overhead = _overhead(params, cfg, poisson_reqs)
+    chunked = _chunked_admit(params, cfg)
 
     gates = {
         "poisson_slo": poisson["slo_ok"],
@@ -268,6 +408,9 @@ def main() -> dict:
         "bursty_oom_free": bursty["oom_free"],
         "bursty_hist_agreement": bursty["agreement_ok"],
         "sheds_classified": overload["classified_ok"],
+        "chunked_tpot_flat": chunked["tpot_flat"],
+        "chunked_gap_shrunk": chunked["gap_shrunk"],
+        "chunked_token_parity": chunked["token_parity"],
     }
     header("serving_load: gates")
     for name, ok in gates.items():
@@ -281,6 +424,7 @@ def main() -> dict:
         "burst_gap_s": BURST_GAP_S,
         "poisson": poisson, "bursty": bursty,
         "overload": overload, "metrics_overhead": overhead,
+        "chunked_admit": chunked,
         "gates": gates,
     }
 

@@ -836,3 +836,54 @@ def ttft(devices: Sequence[DeviceProfile], model: ModelProfile,
                    (l_m - l_gpu) * model.layer_bytes / tab.disk, 0.0)
         + L / W * tab.xi))
     return total + tab.head_out_flops
+
+
+def chunked_prefill_ttft(devices: Sequence[DeviceProfile],
+                         model: ModelProfile, w: Sequence[int],
+                         n: Sequence[int], prompt_len: int = 16, *,
+                         chunk: int = 0,
+                         decode_step_s: Optional[float] = None) -> float:
+    """TTFT under chunked paged admission.
+
+    The prompt runs in ``ceil(prompt_len / chunk)`` page-aligned chunks
+    computed straight into the block pool; between chunks the engine
+    gives the active decode slots one step, so the admitted request's
+    first token waits for the whole prompt's compute (same total FLOPs
+    and KV writes as one-shot prefill — ``ttft``'s linear terms are
+    length-additive) PLUS, per extra chunk, one re-paid per-pass overhead
+    (the ``xi`` window term) and one interleaved decode step:
+
+        TTFT_chunked = TTFT(prompt) + (chunks-1) * (L/W * xi + t_step)
+
+    ``decode_step_s`` overrides the modeled decode step with a measured
+    one (the serving benchmark feeds its observed p50 TPOT); the
+    interleave part, ``(chunks-1) * t_step``, is what the runtime's
+    ``decode/interleave_stall_s`` counter measures from the other side —
+    ``chunked_prefill_crosscheck`` turns the pair into a drift term.
+    """
+    base = ttft(devices, model, w, n, prompt_len)
+    if chunk <= 0 or chunk >= prompt_len or not math.isfinite(base):
+        return base
+    chunks = -(-prompt_len // chunk)
+    tab = _coeff_table(devices, model)
+    L, W = model.n_layers, sum(w)
+    step = decode_step_s if decode_step_s is not None \
+        else token_latency(devices, model, w, n)
+    return base + (chunks - 1) * (L / W * tab.xi_sum + step)
+
+
+def chunked_prefill_crosscheck(modeled_step_s: float,
+                               measured_stall_s: float,
+                               chunks: int) -> TermDrift:
+    """Drift term for the chunked-admission interleave overhead.
+
+    ``modeled_step_s`` is the decode step the TTFT term charges per extra
+    chunk; ``measured_stall_s`` the runtime's total
+    ``decode/interleave_stall_s`` for the admit. Both sides are divided
+    by the interleave count so the drift ratio compares per-step costs
+    (same convention as the per-token terms in ``telemetry_crosscheck``),
+    and the result slots into a :class:`DriftReport` alongside them.
+    """
+    n = max(chunks - 1, 1)
+    return TermDrift("interleave", modeled_step_s,
+                     measured_stall_s / n)

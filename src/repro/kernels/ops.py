@@ -15,7 +15,10 @@ from . import ref
 from .flash_decode import flash_decode as _flash_decode_kernel
 from .flash_decode import flash_verify as _flash_verify_kernel
 from .paged_decode import paged_decode as _paged_decode_kernel
+from .paged_decode import paged_decode_quant as _paged_decode_quant_kernel
 from .paged_decode import paged_verify as _paged_verify_kernel
+from .paged_decode import paged_verify_quant as _paged_verify_quant_kernel
+from .paged_prefill import paged_prefill as _paged_prefill_kernel
 from .q4_matmul import q4_matmul as _q4_matmul_kernel
 from .ssd_scan import ssd_scan as _ssd_scan_kernel
 
@@ -29,6 +32,13 @@ def use_kernels(enable: bool) -> None:
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def kernels_active() -> bool:
+    """True when the compiled Pallas kernels would actually run (TPU
+    backend, not forced to ref) — model layers use this to pick between
+    the fused kernel and the pure-jnp path at trace time."""
+    return not _FORCE_REF and not _interpret()
 
 
 def q4_matmul(x, packed, scale, *, group: int = 64):
@@ -68,6 +78,39 @@ def paged_verify(q, k_pages, v_pages, table, kv_len, *,
                                     window=window)
     return _paged_verify_kernel(q, k_pages, v_pages, table, kv_len,
                                 window=window, interpret=_interpret())
+
+
+def paged_prefill(q, k_pages, v_pages, table, kv_len, *,
+                  window: Optional[int] = None):
+    if _FORCE_REF:
+        return ref.paged_prefill_ref(q, k_pages, v_pages, table, kv_len,
+                                     window=window)
+    return _paged_prefill_kernel(q, k_pages, v_pages, table, kv_len,
+                                 window=window, interpret=_interpret())
+
+
+def paged_decode_quant(q, k_pages, v_pages, k_scale, v_scale, table,
+                       kv_len, *, window: Optional[int] = None):
+    if _FORCE_REF:
+        return ref.paged_decode_quant_ref(q, k_pages, v_pages, k_scale,
+                                          v_scale, table, kv_len,
+                                          window=window)
+    return _paged_decode_quant_kernel(q, k_pages, v_pages, k_scale,
+                                      v_scale, table, kv_len,
+                                      window=window,
+                                      interpret=_interpret())
+
+
+def paged_verify_quant(q, k_pages, v_pages, k_scale, v_scale, table,
+                       kv_len, *, window: Optional[int] = None):
+    if _FORCE_REF:
+        return ref.paged_verify_quant_ref(q, k_pages, v_pages, k_scale,
+                                          v_scale, table, kv_len,
+                                          window=window)
+    return _paged_verify_quant_kernel(q, k_pages, v_pages, k_scale,
+                                      v_scale, table, kv_len,
+                                      window=window,
+                                      interpret=_interpret())
 
 
 def ssd_scan(x, dt, A, Bmat, Cmat, *, chunk: int = 128):

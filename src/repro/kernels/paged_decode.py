@@ -152,3 +152,133 @@ def paged_decode(q: jnp.ndarray, k_pages: jnp.ndarray, v_pages: jnp.ndarray,
     """q: (B, H, D) -> (B, H, D): the T = 1 slice of ``paged_verify``."""
     return paged_verify(q[:, None], k_pages, v_pages, table, kv_len,
                         window=window, interpret=interpret)[:, 0]
+
+
+def _paged_verify_quant_kernel(kv_len_ref, table_ref, q_ref, k_ref, v_ref,
+                               ks_ref, vs_ref, out_ref, acc_ref, m_ref,
+                               l_ref, *, block_s: int,
+                               window: Optional[int], n_chunks: int,
+                               n_draft: int, n_rep: int):
+    """``_paged_verify_kernel`` over int8 pages: K/V blocks arrive packed
+    (one byte per element) plus a per-(position, kv-head) scale block;
+    dequantization is fused into the f32 upcast the attention math does
+    anyway, so the only HBM traffic for KV is the quantized bytes."""
+    b = pl.program_id(0)
+    s_idx = pl.program_id(2)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    rows = n_draft * n_rep
+    q = q_ref[0, 0]                                  # (rows, D)
+    k = k_ref[0, 0].astype(jnp.float32) * ks_ref[0, 0]   # (bs, D) * (bs, 1)
+    v = v_ref[0, 0].astype(jnp.float32) * vs_ref[0, 0]
+    kv_len = kv_len_ref[b]
+
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    s = jnp.dot(q.astype(jnp.float32) * scale, k.T,
+                preferred_element_type=jnp.float32)  # (rows, bs)
+
+    pos = s_idx * block_s + jax.lax.broadcasted_iota(jnp.int32,
+                                                     (1, block_s), 1)
+    t_row = jax.lax.broadcasted_iota(jnp.int32, (rows, 1), 0) // n_rep
+    qpos = kv_len - n_draft + t_row                  # (rows, 1)
+    mask = pos <= qpos                               # (rows, bs)
+    if window is not None:
+        mask &= pos > (qpos - window)
+    s = jnp.where(mask, s, -jnp.inf)
+
+    m_prev = m_ref[...]                              # (rows, 1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    p = jnp.exp(s - m_safe)
+    p = jnp.where(mask, p, 0.0)
+    corr = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, -1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(s_idx == n_chunks - 1)
+    def _done():
+        out_ref[0, 0] = (acc_ref[...]
+                         / jnp.maximum(l_ref[...], 1e-30)
+                         ).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_verify_quant(q: jnp.ndarray, k_pages: jnp.ndarray,
+                       v_pages: jnp.ndarray, k_scale: jnp.ndarray,
+                       v_scale: jnp.ndarray, table: jnp.ndarray,
+                       kv_len: jnp.ndarray, *,
+                       window: Optional[int] = None,
+                       interpret: bool = False) -> jnp.ndarray:
+    """``paged_verify`` over int8 pages. k_pages/v_pages: (P, bs, h_kv, D)
+    int8; k_scale/v_scale: (P, bs, h_kv) per-(position, kv-head) scales
+    (``layers.quantize_kv`` convention: amax/127). Dequant happens inside
+    the kernel — the pages are never inflated in HBM."""
+    B, T, H, D = q.shape
+    bs, h_kv = k_pages.shape[1], k_pages.shape[2]
+    nb = table.shape[1]
+    n_rep = H // h_kv
+    rows = T * n_rep
+    qg = q.reshape(B, T, h_kv, n_rep, D).transpose(0, 2, 1, 3, 4) \
+        .reshape(B, h_kv, rows, D)
+    kt = k_pages.transpose(0, 2, 1, 3)               # (P, h_kv, bs, D)
+    vt = v_pages.transpose(0, 2, 1, 3)
+    kst = k_scale.transpose(0, 2, 1)[..., None] \
+        .astype(jnp.float32)                         # (P, h_kv, bs, 1)
+    vst = v_scale.transpose(0, 2, 1)[..., None].astype(jnp.float32)
+
+    page_spec = pl.BlockSpec((1, 1, bs, D),
+                             lambda b, h, j, kv_len, tab:
+                             (tab[b, j], h, 0, 0))
+    scale_spec = pl.BlockSpec((1, 1, bs, 1),
+                              lambda b, h, j, kv_len, tab:
+                              (tab[b, j], h, 0, 0))
+    grid = (B, h_kv, nb)
+    out = pl.pallas_call(
+        functools.partial(_paged_verify_quant_kernel, block_s=bs,
+                          window=window, n_chunks=nb, n_draft=T,
+                          n_rep=n_rep),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,                   # kv_len, block table
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, rows, D),
+                             lambda b, h, j, kv_len, tab: (b, h, 0, 0)),
+                page_spec, page_spec, scale_spec, scale_spec,
+            ],
+            out_specs=pl.BlockSpec((1, 1, rows, D),
+                                   lambda b, h, j, kv_len, tab:
+                                   (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((rows, D), jnp.float32),
+                pltpu.VMEM((rows, 1), jnp.float32),
+                pltpu.VMEM((rows, 1), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, h_kv, rows, D), q.dtype),
+        interpret=interpret,
+    )(kv_len.astype(jnp.int32), table.astype(jnp.int32), qg, kt, vt,
+      kst, vst)
+    return out.reshape(B, h_kv, T, n_rep, D).transpose(0, 2, 1, 3, 4) \
+        .reshape(B, T, H, D)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_decode_quant(q: jnp.ndarray, k_pages: jnp.ndarray,
+                       v_pages: jnp.ndarray, k_scale: jnp.ndarray,
+                       v_scale: jnp.ndarray, table: jnp.ndarray,
+                       kv_len: jnp.ndarray, *,
+                       window: Optional[int] = None,
+                       interpret: bool = False) -> jnp.ndarray:
+    """q: (B, H, D) -> (B, H, D): the T = 1 slice of
+    ``paged_verify_quant``."""
+    return paged_verify_quant(q[:, None], k_pages, v_pages, k_scale,
+                              v_scale, table, kv_len, window=window,
+                              interpret=interpret)[:, 0]

@@ -1,0 +1,154 @@
+"""Pallas TPU kernel: paged flash-*prefill* attention (chunk vs pages).
+
+Chunked admission (``runtime.engine``) processes a prompt in page-sized
+chunks written directly into the ``BlockPool``: chunk ``j`` holds the S
+newest prompt positions, every earlier position already lives in pages
+addressed by the slot's block table. Attention for the chunk is then
+"S query rows against the paged prefix plus a causal triangle among
+themselves" — exactly the ``paged_decode.paged_verify`` geometry with
+``n_draft = S``, so the kernel shares its structure: scalar-prefetched
+block table in the index maps, online softmax across the sequential
+page axis, (chunk position, GQA rep) row flattening.
+
+What is prefill-specific is the dead-page guard: during a long admit
+most logical pages of the table are either *ahead* of the chunk's
+causal frontier (allocated for positions not yet written) or *behind*
+its attention window — their blocks would be fully masked. The kernel
+skips the matmul/softmax work for those pages with ``pl.when`` (the
+DMA still streams them; block shapes are static), which matters when
+the table is sized for the full context but the chunk sits near the
+front of it.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _paged_prefill_kernel(kv_len_ref, table_ref, q_ref, k_ref, v_ref,
+                          out_ref, acc_ref, m_ref, l_ref, *, block_s: int,
+                          window: Optional[int], n_chunks: int, chunk: int,
+                          n_rep: int):
+    b = pl.program_id(0)
+    s_idx = pl.program_id(2)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    kv_len = kv_len_ref[b]
+    blk_lo = s_idx * block_s
+    # newest query position is kv_len - 1; a page whose first position is
+    # past it is entirely future (fully masked). With a sliding window the
+    # oldest position any row can see is the first chunk row's window
+    # start, kv_len - chunk - window, so a page that ends before it is
+    # entirely expired.
+    live = blk_lo < kv_len
+    if window is not None:
+        live &= (blk_lo + block_s) > (kv_len - chunk - window)
+
+    @pl.when(live)
+    def _compute():
+        rows = chunk * n_rep
+        q = q_ref[0, 0]                              # (rows, D)
+        k = k_ref[0, 0]                              # (bs, D)
+        v = v_ref[0, 0]
+
+        scale = 1.0 / math.sqrt(q.shape[-1])
+        s = jnp.dot(q.astype(jnp.float32) * scale,
+                    k.astype(jnp.float32).T,
+                    preferred_element_type=jnp.float32)  # (rows, bs)
+
+        pos = blk_lo + jax.lax.broadcasted_iota(jnp.int32, (1, block_s), 1)
+        t_row = jax.lax.broadcasted_iota(jnp.int32, (rows, 1), 0) // n_rep
+        qpos = kv_len - chunk + t_row                # (rows, 1)
+        mask = pos <= qpos                           # (rows, bs)
+        if window is not None:
+            mask &= pos > (qpos - window)
+        s = jnp.where(mask, s, -jnp.inf)
+
+        m_prev = m_ref[...]                          # (rows, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe)
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.where(jnp.isfinite(m_prev),
+                         jnp.exp(m_prev - m_safe), 0.0)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+            p, v.astype(jnp.float32), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(s_idx == n_chunks - 1)
+    def _done():
+        out_ref[0, 0] = (acc_ref[...]
+                         / jnp.maximum(l_ref[...], 1e-30)
+                         ).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_prefill(q: jnp.ndarray, k_pages: jnp.ndarray,
+                  v_pages: jnp.ndarray, table: jnp.ndarray,
+                  kv_len: jnp.ndarray, *, window: Optional[int] = None,
+                  interpret: bool = False) -> jnp.ndarray:
+    """q: (B, S, H, D) — one prompt chunk of S tokens per sequence;
+    k_pages/v_pages: (P, bs, h_kv, D); table: (B, nb) int32 page ids;
+    kv_len: (B,) valid positions *including* the S chunk tokens the
+    caller already wrote through the table -> (B, S, H, D).
+
+    Chunk position t sits at absolute position ``kv_len - S + t`` and
+    attends causally over everything at or before it (minus the sliding
+    window, if any). Table entries past ``ceil(kv_len/bs)`` may be any
+    valid page id (sink/stale) — those pages are skipped, not just
+    masked.
+    """
+    B, S, H, D = q.shape
+    bs, h_kv = k_pages.shape[1], k_pages.shape[2]
+    nb = table.shape[1]
+    n_rep = H // h_kv
+    rows = S * n_rep
+    qg = q.reshape(B, S, h_kv, n_rep, D).transpose(0, 2, 1, 3, 4) \
+        .reshape(B, h_kv, rows, D)
+    kt = k_pages.transpose(0, 2, 1, 3)               # (P, h_kv, bs, D)
+    vt = v_pages.transpose(0, 2, 1, 3)
+
+    grid = (B, h_kv, nb)
+    out = pl.pallas_call(
+        functools.partial(_paged_prefill_kernel, block_s=bs, window=window,
+                          n_chunks=nb, chunk=S, n_rep=n_rep),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,                   # kv_len, block table
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, rows, D),
+                             lambda b, h, j, kv_len, tab: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, bs, D),
+                             lambda b, h, j, kv_len, tab:
+                             (tab[b, j], h, 0, 0)),
+                pl.BlockSpec((1, 1, bs, D),
+                             lambda b, h, j, kv_len, tab:
+                             (tab[b, j], h, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, rows, D),
+                                   lambda b, h, j, kv_len, tab:
+                                   (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((rows, D), jnp.float32),
+                pltpu.VMEM((rows, 1), jnp.float32),
+                pltpu.VMEM((rows, 1), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, h_kv, rows, D), q.dtype),
+        interpret=interpret,
+    )(kv_len.astype(jnp.int32), table.astype(jnp.int32), qg, kt, vt)
+    return out.reshape(B, h_kv, S, n_rep, D).transpose(0, 2, 1, 3, 4) \
+        .reshape(B, S, H, D)

@@ -58,6 +58,41 @@ def paged_decode_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
                             window=window)[:, 0]
 
 
+def paged_prefill_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
+                      v_pages: jnp.ndarray, table: jnp.ndarray,
+                      kv_len: jnp.ndarray, *,
+                      window: Optional[int] = None) -> jnp.ndarray:
+    """q: (B, S, H, D) — one prompt chunk whose KV the caller already
+    wrote through the table (kv_len includes it). Chunk-vs-pages causal
+    attention is the verify geometry with T = S, so the oracle is the
+    same model-layer paged attention."""
+    return paged_verify_attention(q, k_pages, v_pages, table, kv_len,
+                                  window=window)
+
+
+def _dequant_pages(pages: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """(P, bs, h_kv, D) int8 + (P, bs, h_kv) scales -> f32 pages."""
+    return pages.astype(jnp.float32) * scale.astype(jnp.float32)[..., None]
+
+
+def paged_verify_quant_ref(q, k_pages, v_pages, k_scale, v_scale, table,
+                           kv_len, *, window: Optional[int] = None):
+    """Dequant-then-attend oracle for the fused int8-KV paged kernel:
+    inflate the quantized pages to f32 (exactly what the kernel fuses
+    away), then run the standard paged verify attention."""
+    return paged_verify_attention(q, _dequant_pages(k_pages, k_scale),
+                                  _dequant_pages(v_pages, v_scale),
+                                  table, kv_len, window=window)
+
+
+def paged_decode_quant_ref(q, k_pages, v_pages, k_scale, v_scale, table,
+                           kv_len, *, window: Optional[int] = None):
+    """q: (B, H, D) -> (B, H, D): T = 1 slice of the int8 oracle."""
+    return paged_verify_quant_ref(q[:, None], k_pages, v_pages, k_scale,
+                                  v_scale, table, kv_len,
+                                  window=window)[:, 0]
+
+
 def ssd_scan_ref(x, dt, A, Bmat, Cmat, *, chunk: int = 128):
     """SSD oracle: the model-layer chunked scan (itself validated against a
     sequential recurrence in tests)."""

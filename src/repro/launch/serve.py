@@ -78,6 +78,20 @@ def main(argv=None) -> int:
                          "on the same requests; fails on any token "
                          "mismatch and reports KV high-water vs the "
                          "dense envelope")
+    ap.add_argument("--prefill-chunk", type=int, default=0, metavar="N",
+                    help="with --paged-kv: admit prompts in N-token "
+                         "chunks computed straight into the block pool, "
+                         "interleaving one decode step for the active "
+                         "slots between chunks so a long admit never "
+                         "stalls decode for the whole prompt (0 = "
+                         "whole-prompt scratch prefill); tokens must stay "
+                         "byte-identical to the unchunked run")
+    ap.add_argument("--kv-quant-kernel", action="store_true",
+                    help="with --paged-kv: store KV pages int8 with "
+                         "per-vector scales and attend through the fused "
+                         "dequant-in-kernel paged flash kernels (pages "
+                         "are read packed, never inflated to bf16 in "
+                         "HBM; jnp dequant oracle off-TPU)")
     ap.add_argument("--device-budget", type=float, default=0.0,
                     metavar="MB",
                     help="with --paged-kv: cap device-tier KV bytes; the "
@@ -220,12 +234,15 @@ def main(argv=None) -> int:
                       ring_ctx=(mesh, stages, tp) if ring else None,
                       tracer=tracer)
     if args.paged_kv:
+        pcfg = cfg
+        if args.kv_quant_kernel and cfg.kv_dtype != "int8":
+            pcfg = dataclasses.replace(cfg, kv_dtype="int8")
         if cfg.family not in ("dense", "moe", "vlm"):
             print(f"paged-kv: unsupported family {cfg.family} — skipped")
-        elif cfg.kv_dtype == "int8":
-            print("paged-kv: int8 KV quantization not paged yet — skipped")
+        elif pcfg.kv_dtype == "int8" and pcfg.mla:
+            print("paged-kv: int8 MLA latent pages unsupported — skipped")
         else:
-            _paged_smoke(cfg, params, args, tracer=tracer,
+            _paged_smoke(pcfg, params, args, tracer=tracer,
                          metrics=metrics)
     if args.chaos != "none":
         if cfg.family not in ("dense", "moe", "vlm", "ssm"):
@@ -267,6 +284,13 @@ def _percentile_line(metrics) -> str:
             parts.append(f"{label} p50/p99 "
                          f"{pcts[f'{key}/p50'] * 1e3:.1f}/"
                          f"{pcts[f'{key}/p99'] * 1e3:.1f} ms")
+    if "request/prefill_chunks/p50" in pcts:
+        parts.append(f"prefill chunks p50/p99 "
+                     f"{pcts['request/prefill_chunks/p50']:.0f}/"
+                     f"{pcts['request/prefill_chunks/p99']:.0f}")
+    stall = metrics._counters.get("decode/interleave_stall_s")
+    if stall is not None and stall.value > 0:
+        parts.append(f"interleave stall {stall.value * 1e3:.1f} ms")
     return "; ".join(parts)
 
 
@@ -430,7 +454,8 @@ def _paged_smoke(cfg, params, args, *, tracer=None, metrics=None) -> None:
     n_pages = 2 + B * (-(-ctx // page_tokens))
     eng_p, kv = make_paged_engine(params, cfg, B, ctx, n_pages=n_pages,
                                   page_tokens=page_tokens, tracer=tracer,
-                                  metrics=metrics)
+                                  metrics=metrics,
+                                  prefill_chunk=args.prefill_chunk or None)
     t0 = clock()
     fin_p, _ = eng_p.run(kv.init_cache(), reqs)
     t_paged = clock() - t0
@@ -442,6 +467,13 @@ def _paged_smoke(cfg, params, args, *, tracer=None, metrics=None) -> None:
     if dense != paged:
         bad = [u for u in dense if dense[u] != paged.get(u)]
         raise SystemExit(f"paged-kv parity FAILED for uids {bad}")
+    mode = []
+    if args.prefill_chunk:
+        mode.append(f"chunked prefill ({args.prefill_chunk} tokens)")
+    if cfg.kv_dtype == "int8":
+        mode.append("int8 KV pages")
+    if mode:
+        print(f"paged-kv mode: {', '.join(mode)}")
     print(f"paged decode ({len(reqs)} reqs through {B} slots, "
           f"{page_tokens}-token pages): tokens byte-identical to dense; "
           f"{t_paged:.2f}s vs dense {t_dense:.2f}s; KV high-water "

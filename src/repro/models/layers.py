@@ -572,40 +572,131 @@ def paged_verify_attention(q: jnp.ndarray, k_pages: jnp.ndarray,
     return verify_attention(q, k, v, kv_len, window=window)
 
 
+def paged_prefill_attention(q: jnp.ndarray, k_pages: jnp.ndarray,
+                            v_pages: jnp.ndarray, table: jnp.ndarray,
+                            kv_len: jnp.ndarray, *,
+                            window: Optional[int] = None) -> jnp.ndarray:
+    """Chunk-vs-pages causal attention (pure-jnp oracle for the Pallas
+    ``paged_prefill`` kernel).
+
+    q: (B, S, H, D) — one prompt chunk whose KV the caller already wrote
+    through the table; ``kv_len`` includes it, so chunk position t sits
+    at absolute position ``kv_len - S + t``. The gathered sequence runs
+    through ``chunked_causal_attention`` — the *same* function the dense
+    prefill path uses — so a chunk-prefilled slot's activations (and the
+    first token they produce) are byte-identical to one-shot dense
+    prefill. Chunked admission runs one slot at a time, so all batch
+    rows share the offset (``kv_len[0]`` is used).
+    """
+    S = q.shape[1]
+    k = gather_pages(k_pages, table).astype(q.dtype)
+    v = gather_pages(v_pages, table).astype(q.dtype)
+    return chunked_causal_attention(q, k, v, window=window,
+                                    q_offset=kv_len[0] - S)
+
+
+def _paged_attention(q: jnp.ndarray, pages: Dict, table: jnp.ndarray,
+                     kv_len: jnp.ndarray, *, window: Optional[int],
+                     prefill: bool) -> jnp.ndarray:
+    """Dispatch paged attention: fused Pallas kernel when compiled
+    kernels are live (TPU), the pure-jnp oracle elsewhere. ``pages`` may
+    carry int8 K/V plus ``k_scale``/``v_scale`` — the kernel reads the
+    quantized pages directly; the jnp path dequantizes the (gathered)
+    sequence first."""
+    from ..kernels import ops
+    if "k_scale" in pages:
+        if ops.kernels_active():
+            return ops.paged_verify_quant(
+                q, pages["k"], pages["v"], pages["k_scale"],
+                pages["v_scale"], table, kv_len, window=window)
+        k = dequantize_kv(gather_pages(pages["k"], table),
+                          gather_pages(pages["k_scale"], table), q.dtype)
+        v = dequantize_kv(gather_pages(pages["v"], table),
+                          gather_pages(pages["v_scale"], table), q.dtype)
+        if prefill:
+            S = q.shape[1]
+            return chunked_causal_attention(q, k, v, window=window,
+                                            q_offset=kv_len[0] - S)
+        return verify_attention(q, k, v, kv_len, window=window)
+    if prefill:
+        if ops.kernels_active():
+            return ops.paged_prefill(q, pages["k"], pages["v"], table,
+                                     kv_len, window=window)
+        return paged_prefill_attention(q, pages["k"], pages["v"], table,
+                                       kv_len, window=window)
+    if ops.kernels_active():
+        return ops.paged_verify(q, pages["k"], pages["v"], table, kv_len,
+                                window=window)
+    return paged_verify_attention(q, pages["k"], pages["v"], table, kv_len,
+                                  window=window)
+
+
 def attn_block_paged(p: Params, cfg: ModelConfig, x: jnp.ndarray, positions,
                      pages: Dict, table: jnp.ndarray, ln: jnp.ndarray,
-                     *, tp_axis: Optional[str] = None
+                     *, tp_axis: Optional[str] = None,
+                     prefill: bool = False, write: bool = True
                      ) -> Tuple[jnp.ndarray, Dict]:
     """Decode-mode attention block over one layer's page pool.
 
-    ``pages``: {"k": (P, bs, h_kv, hd), "v": ...}; ``ln``: (B,) valid
-    lengths BEFORE this step. Writes the T new lines through the block
-    table, then attends over the gathered pages — the same per-position
-    math as ``attn_block``'s decode path (T >= 1 verify included), so the
-    paged cache changes where KV lives, never what attention computes.
+    ``pages``: {"k": (P, bs, h_kv, hd), "v": ...} — plus
+    ``k_scale``/``v_scale`` (P, bs, h_kv) for int8 pools, in which case
+    new lines quantize on write (``quantize_kv``) and attention reads
+    the quantized pages (dequant fused into the kernel on TPU).
+    ``ln``: (B,) valid lengths BEFORE this step. Writes the T new lines
+    through the block table, then attends over the gathered pages — the
+    same per-position math as ``attn_block``'s decode path (T >= 1
+    verify included), so the paged cache changes where KV lives, never
+    what attention computes.
+
+    ``prefill``: chunked-admission mode — attention mirrors the dense
+    prefill math (``chunked_causal_attention``) instead of the decode
+    path, keeping chunk-prefilled activations byte-identical to one-shot
+    dense prefill. ``write=False`` skips the page writes (a fully
+    prefix-shared prompt re-derives its last-token logits from pages it
+    must not touch).
     """
     B, S, _ = x.shape
     q, k, v = attn_qkv(p, cfg, x, positions)
-    kp = write_pages(pages["k"], table, ln, k)
-    vp = write_pages(pages["v"], table, ln, v)
-    out = paged_verify_attention(q, kp, vp, table, ln + S,
-                                 window=cfg.attn_window)
+    quantized = "k_scale" in pages
+    if not write:
+        new_pages = pages
+    elif quantized:
+        kq, ksc = quantize_kv(k)
+        vq, vsc = quantize_kv(v)
+        new_pages = {
+            "k": write_pages(pages["k"], table, ln, kq),
+            "v": write_pages(pages["v"], table, ln, vq),
+            "k_scale": write_pages(pages["k_scale"], table, ln, ksc),
+            "v_scale": write_pages(pages["v_scale"], table, ln, vsc),
+        }
+    else:
+        new_pages = {"k": write_pages(pages["k"], table, ln, k),
+                     "v": write_pages(pages["v"], table, ln, v)}
+    out = _paged_attention(q, new_pages, table, ln + S,
+                           window=cfg.attn_window, prefill=prefill)
     o = qmm(out.reshape(B, S, -1), p["wo"])
     if tp_axis:
         o = lax.psum(o, tp_axis)
-    return o, {"k": kp, "v": vp}
+    return o, new_pages
 
 
 def mla_block_paged(p: Params, cfg: ModelConfig, x: jnp.ndarray, positions,
                     pages: Dict, table: jnp.ndarray, ln: jnp.ndarray,
-                    *, tp_axis: Optional[str] = None
+                    *, tp_axis: Optional[str] = None,
+                    prefill: bool = False, write: bool = True
                     ) -> Tuple[jnp.ndarray, Dict]:
     """MLA decode against paged latent storage (absorbed form).
 
     ``pages``: {"latent": (P, bs, r_kv + qk_rope_dim)}. Mirrors the
     absorbed decode branch of ``mla_block`` with the latent gathered
     through the block table instead of sliced from a dense cache.
+    The S > 1 masking is already chunk-causal (position ``ln + t``
+    attends at-or-before itself), so chunked admission reuses this path
+    unchanged — ``prefill`` is accepted for signature parity and
+    ``write=False`` skips the latent write (fully prefix-shared
+    prompts).
     """
+    del prefill
     B, S, d = x.shape
     H = cfg.n_heads
     r_kv = cfg.kv_lora_rank
@@ -623,7 +714,8 @@ def mla_block_paged(p: Params, cfg: ModelConfig, x: jnp.ndarray, positions,
                         cfg.rope_theta)[:, :, 0]
     lat_cat = jnp.concatenate([latent, k_rope], -1)
 
-    lp = write_pages(pages["latent"], table, ln, lat_cat)
+    lp = write_pages(pages["latent"], table, ln, lat_cat) if write \
+        else pages["latent"]
     lc = gather_pages(lp, table)                      # (B, S_eff, r + dr)
     lat_all = lc[..., :r_kv].astype(x.dtype)
     rope_all = lc[..., r_kv:].astype(x.dtype)

@@ -643,7 +643,8 @@ def decode_step_layerwise(source, cfg: ModelConfig, cache: Dict,
 # dense decode path, so paged greedy decode is byte-identical to dense.
 
 def _paged_backbone(params: Params, cfg: ModelConfig, x, positions, cache,
-                    *, tp_axis: Optional[str]):
+                    *, tp_axis: Optional[str], prefill: bool = False,
+                    write: bool = True):
     ln = cache["len"]
     table = cache["block_table"]
 
@@ -651,10 +652,12 @@ def _paged_backbone(params: Params, cfg: ModelConfig, x, positions, cache,
         h_in = ll.rms_norm(h, p["attn_norm"], cfg.norm_eps)
         if cfg.mla:
             a, npg = ll.mla_block_paged(p["attn"], cfg, h_in, positions,
-                                        pg, table, ln, tp_axis=tp_axis)
+                                        pg, table, ln, tp_axis=tp_axis,
+                                        prefill=prefill, write=write)
         else:
             a, npg = ll.attn_block_paged(p["attn"], cfg, h_in, positions,
-                                         pg, table, ln, tp_axis=tp_axis)
+                                         pg, table, ln, tp_axis=tp_axis,
+                                         prefill=prefill, write=write)
         h = h + a
         g = ll.rms_norm(h, p["ffn_norm"], cfg.norm_eps)
         if cfg.n_experts:
@@ -693,6 +696,39 @@ def decode_step_paged(params: Params, cfg: ModelConfig, cache: Dict,
         pos = jnp.broadcast_to(pos[None], (3, B, T))
     x, new_cache = _paged_backbone(params, cfg, x, pos, cache,
                                    tp_axis=tp_axis)
+    x = ll.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return unembed(params, cfg, x), new_cache
+
+
+def prefill_chunk_paged(params: Params, cfg: ModelConfig, cache: Dict,
+                        tokens: jnp.ndarray, *,
+                        tp_axis: Optional[str] = None,
+                        write: bool = True) -> Tuple[jnp.ndarray, Dict]:
+    """One chunk of a chunked (paged) prefill. tokens: (B, S).
+
+    ``cache`` is a per-slot view ({"pages", "block_table", "len"}) whose
+    ``len`` counts the prompt positions already materialized in pages
+    (shared prefix + earlier chunks); the chunk's KV is written directly
+    through the block table and attention runs with the dense-prefill
+    math (``chunked_causal_attention``), so running a prompt chunk by
+    chunk produces byte-identical activations — and first token — to
+    one-shot dense prefill. Returns full (B, S, V) logits (the caller
+    argmaxes the last position of the last chunk) and the updated view.
+
+    ``write=False`` re-derives logits without touching pages — used when
+    the whole prompt was a prefix-cache hit and the final positions'
+    KV already exists in shared pages that must not be rewritten.
+    """
+    B, T = tokens.shape
+    if cfg.family not in ("dense", "moe", "vlm"):
+        raise ValueError(f"paged prefill unsupported for {cfg.family}")
+    x = embed_tokens(params, cfg, tokens)
+    pos = cache["len"][:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]
+    if cfg.mrope:
+        pos = jnp.broadcast_to(pos[None], (3, B, T))
+    x, new_cache = _paged_backbone(params, cfg, x, pos, cache,
+                                   tp_axis=tp_axis, prefill=True,
+                                   write=write)
     x = ll.rms_norm(x, params["final_norm"], cfg.norm_eps)
     return unembed(params, cfg, x), new_cache
 

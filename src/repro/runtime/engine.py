@@ -108,7 +108,8 @@ class ContinuousBatcher:
                  write_slot: Callable, decode: Callable,
                  *, eos_id: Optional[int] = None, spec=None, source=None,
                  ctx: Optional[int] = None, kv=None, tracer=None,
-                 metrics=None):
+                 metrics=None, prefill_chunk: Optional[int] = None,
+                 chunk_step: Optional[Callable] = None):
         self.B = batch
         self.prefill_one = prefill_one
         self.write_slot = write_slot
@@ -118,6 +119,17 @@ class ContinuousBatcher:
         self.source = source
         self.ctx = ctx
         self.kv = kv
+        #: chunked admission (paged only): process prompts in chunks of
+        #: this many tokens via ``chunk_step(view, tokens, write)`` —
+        #: KV written straight into the slot's pages, one decode step
+        #: for the active slots interleaved between chunks
+        self.prefill_chunk = prefill_chunk
+        self.chunk_step = chunk_step
+        if prefill_chunk is not None and (kv is None
+                                          or chunk_step is None):
+            raise ValueError(
+                "prefill_chunk requires a paged cache (kv) and a "
+                "chunk_step callable")
         self.tracer = tracer or NULL_TRACER
         self.metrics = metrics
         self._tracker = None
@@ -237,7 +249,19 @@ class ContinuousBatcher:
                 tr.admitted(uid, restored=True)
                 tr.prefill_done(uid, clock() - t_admit)
             return cache, tokens
-        if self.kv is not None:
+        if self.kv is not None and self.prefill_chunk is not None:
+            self.kv.plan_admit(
+                cache, slot, [int(t) for t in np.asarray(prompt)],
+                max_new + (self.spec.gamma if self.spec else 0),
+                register=False)
+            try:
+                cache, tokens, first_tok = self._chunked_prefill(
+                    cache, tokens, slot, np.asarray(prompt), uid)
+            except BaseException:
+                # a failed chunk must not leak the planned pages
+                self.kv.abort_admit(slot)
+                raise
+        elif self.kv is not None:
             margin = self.spec.gamma if self.spec is not None else 0
             self.kv.plan_admit(cache, slot,
                                [int(t) for t in np.asarray(prompt)],
@@ -272,6 +296,52 @@ class ContinuousBatcher:
             tr.prefill_done(uid, clock() - t_admit)
             tr.token(uid)                # prefill emits the first token
         return cache, tokens
+
+    def _chunked_prefill(self, cache, tokens, slot: int,
+                         prompt: np.ndarray, uid: int):
+        """Admit one prompt in page-sized chunks computed straight into
+        the slot's planned pages, interleaving one decode step for the
+        active slots between chunks — the long-admit TPOT spike becomes
+        a bounded per-chunk stall. The leading prefix-shared pages are
+        skipped entirely (their KV is already resident); a fully shared
+        prompt re-derives its last-position logits read-only. Returns
+        ``(cache, tokens, first_token)``.
+        """
+        kv = self.kv
+        S = len(prompt)
+        cache, skip = kv.begin_chunked_admit(cache, slot, S)
+        table1 = jnp.asarray(kv.chunk_table(slot))
+        o, write = skip, True
+        if skip >= S:
+            # whole prompt prefix-shared: nothing to write, but the
+            # first token still needs the final position's logits
+            o, write = S - 1, False
+        logits = None
+        n_chunks = 0
+        while o < S:
+            c = min(self.prefill_chunk, S - o)
+            view = {"pages": cache["pages"], "block_table": table1,
+                    "len": jnp.full((1,), o, jnp.int32)}
+            t0 = clock()
+            with self.tracer.span(f"prefill-chunk[{uid}:{n_chunks}]",
+                                  cat="compute", track="decode", uid=uid):
+                logits, view = self.chunk_step(
+                    view, jnp.asarray(prompt[o:o + c])[None, :], write)
+                logits.block_until_ready()
+            cache = {**cache, "pages": view["pages"]}
+            n_chunks += 1
+            o += c
+            if o < S and self.active():
+                # active decode slots stalled for exactly one chunk;
+                # give them a step before the next one
+                if self._tracker is not None:
+                    self._tracker.interleave_stall(clock() - t0)
+                cache, tokens = self.step(cache, tokens)
+        first_tok = int(jnp.argmax(logits[0, -1]))
+        cache = kv.finish_chunked_admit(cache, slot, S)
+        if self._tracker is not None:
+            self._tracker.prefill_chunks(uid, n_chunks)
+        return cache, tokens, first_tok
 
     def _finish(self, i: int, cache):
         st = self.slots[i]

@@ -52,6 +52,7 @@ import logging
 import mmap
 import os
 import threading
+import functools
 import time
 from collections import OrderedDict
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
@@ -810,13 +811,28 @@ def paged_cache_spec(cfg) -> Dict[str, Tuple[int, ...]]:
         raise ValueError(
             f"paged KV cache unsupported for family {cfg.family} "
             "(recurrent state has no per-token pages)")
-    if cfg.kv_dtype == "int8":
-        raise NotImplementedError(
-            "paged KV cache does not support int8 KV quantization yet")
     if cfg.mla:
+        if cfg.kv_dtype == "int8":
+            raise NotImplementedError(
+                "paged MLA latent storage does not support int8 "
+                "quantization (the latent is already compressed)")
         return {"latent": (cfg.kv_lora_rank + cfg.qk_rope_dim,)}
-    return {"k": (max(cfg.kv_heads, 1), cfg.head_dim),
-            "v": (max(cfg.kv_heads, 1), cfg.head_dim)}
+    hk, hd = max(cfg.kv_heads, 1), cfg.head_dim
+    if cfg.kv_dtype == "int8":
+        # int8 K/V plus per-(position, kv-head) scales
+        # (``layers.quantize_kv`` convention) — the paged flash kernels
+        # read the quantized leaves directly, dequant fused.
+        return {"k": (hk, hd), "v": (hk, hd),
+                "k_scale": (hk,), "v_scale": (hk,)}
+    return {"k": (hk, hd), "v": (hk, hd)}
+
+
+def paged_leaf_dtype(name: str, cfg, pool_dtype):
+    """Storage dtype of a paged-cache leaf: int8 for quantized K/V,
+    the pool dtype for everything else (scales included)."""
+    if cfg.kv_dtype == "int8" and name in ("k", "v"):
+        return jnp.int8
+    return pool_dtype
 
 
 @dataclasses.dataclass
@@ -933,6 +949,11 @@ class PagedKVCache:
         #: slot -> [(page kind, content key)] for the admit in flight
         #: between plan_admit and install ("shared"|"fetched"|"fresh")
         self._admit_meta: Dict[int, List[Tuple[str, Any]]] = {}
+        #: slots mid chunked admission: their device table row stays all
+        #: sink (decode steps interleaved between chunks must not write
+        #: into the half-filled real pages); chunk steps address the
+        #: pages through a private ``chunk_table`` row instead
+        self._chunking: set = set()
         # stats
         self._active_pages_hw = 0
         self._active_tokens_hw = 0
@@ -944,7 +965,9 @@ class PagedKVCache:
     def init_cache(self) -> Dict[str, Any]:
         L = self.cfg.n_layers
         P, bs = self.pool.n_pages, self.page_tokens
-        pages = {name: jnp.zeros((L, P, bs) + trail, self.dtype)
+        pages = {name: jnp.zeros((L, P, bs) + trail,
+                                 paged_leaf_dtype(name, self.cfg,
+                                                  self.dtype))
                  for name, trail in self._spec.items()}
         return {"pages": pages,
                 "block_table": jnp.zeros((self.B, self.max_pages),
@@ -954,9 +977,11 @@ class PagedKVCache:
     @property
     def page_bytes(self) -> int:
         L, bs = self.cfg.n_layers, self.page_tokens
-        itemsize = jnp.zeros((), self.dtype).dtype.itemsize
-        return sum(L * bs * int(np.prod(trail, dtype=np.int64)) * itemsize
-                   for trail in self._spec.values())
+        return sum(
+            L * bs * int(np.prod(trail, dtype=np.int64))
+            * jnp.zeros((), paged_leaf_dtype(name, self.cfg, self.dtype)
+                        ).dtype.itemsize
+            for name, trail in self._spec.items())
 
     # -- stats ------------------------------------------------------------- #
 
@@ -1050,10 +1075,11 @@ class PagedKVCache:
         lens = np.asarray(cache["len"]).copy()
         for slot in self._dirty:
             row = np.full((self.max_pages,), SINK_PAGE, np.int32)
-            pids = self._slot_pages[slot][:self.max_pages]
-            row[:len(pids)] = pids
+            if slot not in self._chunking:       # mid-chunk: stay masked
+                pids = self._slot_pages[slot][:self.max_pages]
+                row[:len(pids)] = pids
             table[slot] = row
-            lens[slot] = self._len[slot]
+            lens[slot] = 0 if slot in self._chunking else self._len[slot]
         self._dirty.clear()
         return {**cache, "block_table": jnp.asarray(table),
                 "len": jnp.asarray(lens)}
@@ -1074,7 +1100,8 @@ class PagedKVCache:
         return worst <= self._usable
 
     def plan_admit(self, cache, slot: int, prompt: Sequence[int],
-                   max_new: int) -> Dict[str, int]:
+                   max_new: int, *, register: bool = True
+                   ) -> Dict[str, int]:
         """Reserve pages for a prompt: prefix-share where hashes match,
         schedule background fetches for offloaded matches, allocate the
         rest (the alloc-on-demand half of the admit contract — the only
@@ -1084,6 +1111,13 @@ class PagedKVCache:
         Runs *before* the prefill compute so offload fetches overlap it;
         ``install`` collects them afterwards. ``cache`` is read-only here
         (eviction offload copies page bytes device->host).
+
+        ``register=False`` defers hash registration of fresh pages to
+        ``finish_chunked_admit``: chunked admission fills them over many
+        interleaved steps, and a concurrent admit must not prefix-share
+        a page whose bytes are not all there yet. (The dense path fills
+        pages in one ``install`` with no interleaving, so it registers
+        eagerly and keeps the plan-to-install overlap.)
         """
         bs = self.page_tokens
         S, total = len(prompt), len(prompt) + max_new
@@ -1123,7 +1157,8 @@ class PagedKVCache:
                     kind = "fetched"         # frequency signal as lookup
                 else:
                     pid = self.pool.alloc(evict_cb=self._evict_cb(cache))
-                    self.pool.register(h, pid)
+                    if register:
+                        self.pool.register(h, pid)
                     kind = "fresh"
                 pids.append(pid)
                 meta.append((kind, h))
@@ -1159,6 +1194,7 @@ class PagedKVCache:
         self._slot_pages[slot] = []
         self._reserved[slot] = 0
         self._len[slot] = 0
+        self._chunking.discard(slot)
         self._dirty.add(slot)
 
     def install(self, cache, slot: int, slot_layers: Params,
@@ -1196,6 +1232,68 @@ class PagedKVCache:
             pids_w.append(pid)
             trees.append(blk)
         cache = self._scatter_pages(cache, pids_w, trees)
+        self._len[slot] = length
+        self._dirty.add(slot)
+        cache = self._sync_tables(cache)
+        self._note_highwater()
+        return cache
+
+    # -- chunked admission (prompt KV computed straight into pages) --------- #
+
+    def begin_chunked_admit(self, cache, slot: int, prompt_len: int
+                            ) -> Tuple[Dict[str, Any], int]:
+        """Prepare a planned admit (``plan_admit(register=False)``) for
+        chunk-direct writes: collect offloaded prefix matches into their
+        device pages now (chunk attention reads them, so the fetch can
+        no longer overlap the whole prefill), compute how many leading
+        prompt tokens are already materialized (shared + fetched prefix
+        — chunk compute starts after them), and mask the slot's device
+        table row (all sink, len 0) so decode steps interleaved between
+        chunks cannot write into the half-filled pages. Chunk steps
+        address the pages through ``chunk_table`` instead.
+
+        Returns ``(cache, skip_tokens)``.
+        """
+        meta = self._admit_meta[slot]
+        pids = self._slot_pages[slot]
+        pids_w: List[int] = []
+        trees: List[Params] = []
+        for pid, (kind, h) in zip(pids, meta):
+            if kind == "fetched":
+                pids_w.append(pid)
+                trees.append(self.offloader.get(h))
+        cache = self._scatter_pages(cache, pids_w, trees)
+        skip = 0
+        for kind, _ in meta:
+            if kind == "fresh":
+                break
+            skip += 1
+        skip_tokens = prompt_len if skip >= len(meta) \
+            else skip * self.page_tokens
+        self._chunking.add(slot)
+        self._dirty.add(slot)
+        cache = self._sync_tables(cache)
+        return cache, skip_tokens
+
+    def chunk_table(self, slot: int) -> np.ndarray:
+        """(1, max_pages) int32 block-table row for chunk steps of a
+        mid-admission slot (its row in the shared device table is masked
+        until ``finish_chunked_admit``)."""
+        row = np.full((1, self.max_pages), SINK_PAGE, np.int32)
+        pids = self._slot_pages[slot][:self.max_pages]
+        row[0, :len(pids)] = pids
+        return row
+
+    def finish_chunked_admit(self, cache, slot: int, length: int
+                             ) -> Dict[str, Any]:
+        """Complete a chunked admit: the prompt's KV is fully in pages,
+        so register the fresh pages' content keys (future admits may now
+        prefix-share them) and unmask the slot's table row."""
+        meta = self._admit_meta.pop(slot)
+        for pid, (kind, h) in zip(self._slot_pages[slot], meta):
+            if kind == "fresh":
+                self.pool.register(h, pid)
+        self._chunking.discard(slot)
         self._len[slot] = length
         self._dirty.add(slot)
         cache = self._sync_tables(cache)
@@ -1450,6 +1548,24 @@ class PagedKVCache:
 #  continuous-batching integration
 # --------------------------------------------------------------------------- #
 
+# module-level jits so the compile cache is shared across engine builds
+# (benchmarks tear engines down between scenarios; warmup must survive).
+# ``cfg`` is a frozen dataclass -> hashable static; ``write`` selects the
+# prefix-hit replay variant that must not touch pages.
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _decode_paged_jit(params, cfg, cache, tokens):
+    from ..models import model as M
+
+    return M.decode_step_paged(params, cfg, cache, tokens)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "write"))
+def _prefill_chunk_jit(params, cfg, view, tokens, write):
+    from ..models import model as M
+
+    return M.prefill_chunk_paged(params, cfg, view, tokens, write=write)
+
+
 def make_paged_engine(params, cfg, batch: int, ctx: int, *,
                       n_pages: Optional[int] = None,
                       page_tokens: int = 16, eos_id: Optional[int] = None,
@@ -1462,6 +1578,7 @@ def make_paged_engine(params, cfg, batch: int, ctx: int, *,
                       offload_quant: bool = False,
                       disk_dir: Optional[str] = None,
                       park_idle_s: Optional[float] = None,
+                      prefill_chunk: Optional[int] = None,
                       metrics=None):
     """Build a ``ContinuousBatcher`` over a paged KV cache.
 
@@ -1469,6 +1586,14 @@ def make_paged_engine(params, cfg, batch: int, ctx: int, *,
     requests)``. The decode step is ``models.decode_step_paged`` — greedy
     output is byte-identical to the dense engine's, only where KV lives
     changes.
+
+    ``prefill_chunk``: admit prompts in chunks of this many tokens
+    (rounded to a page multiple), computed straight into the slot's
+    pages (``models.prefill_chunk_paged``) and interleaved with decode
+    steps for the already-active slots — a long admit no longer stalls
+    every decoding stream for its whole prefill. Token streams stay
+    byte-identical to the one-shot dense prefill. None = classic
+    dense-scratch prefill + scatter install.
     """
     from ..models import model as M
     from .engine import ContinuousBatcher
@@ -1487,12 +1612,25 @@ def make_paged_engine(params, cfg, batch: int, ctx: int, *,
         return int(jnp.argmax(logits[0, -1])), c1
 
     def decode(cache, tokens):
-        return M.decode_step_paged(params, cfg, cache, tokens)
+        # jitted steady-state step: the paged hot path runs compiled,
+        # not op-by-op (the one-shot dense-scratch prefill stays eager —
+        # chunked admission is the fast path that replaces it)
+        return _decode_paged_jit(params, cfg, cache, tokens)
+
+    def chunk_step(view, tokens, write=True):
+        return _prefill_chunk_jit(params, cfg, view, tokens, write)
 
     def write_slot(cache, slot_cache, slot, length):   # paged: kv.install
         raise RuntimeError("paged engine installs via kv, not write_slot")
 
+    if prefill_chunk is not None:
+        # page-sized chunks: chunk boundaries must align with page
+        # boundaries so fresh pages are filled whole before a future
+        # admit may share them
+        prefill_chunk = max(prefill_chunk // page_tokens, 1) * page_tokens
     eng = ContinuousBatcher(batch, prefill_one, write_slot, decode,
                             eos_id=eos_id, spec=spec, kv=kv,
-                            tracer=tracer, metrics=metrics)
+                            tracer=tracer, metrics=metrics,
+                            prefill_chunk=prefill_chunk,
+                            chunk_step=chunk_step)
     return eng, kv

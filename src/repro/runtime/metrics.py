@@ -193,8 +193,10 @@ class RequestTrace:
     prompt_len: int = 0
     admit_t: Optional[float] = None
     first_token_t: Optional[float] = None
+    last_token_t: Optional[float] = None
     finish_t: Optional[float] = None
     n_tokens: int = 0
+    max_gap_s: float = 0.0            # worst inter-token gap (stall peak)
     restored: bool = False            # parked-session restore admit
     outcome: str = "pending"          # pending | finished | shed | rejected
     reason: str = ""                  # reject/shed classification code
@@ -473,13 +475,31 @@ class RequestTracker:
     def prefill_done(self, uid: int, seconds: float) -> None:
         self.reg.observe("request/prefill_s", seconds)
 
+    def prefill_chunks(self, uid: int, n: int) -> None:
+        """Chunked admission: how many paged-prefill chunks this request
+        took (1 for an unchunked or fully prefix-shared admit)."""
+        self.reg.observe("request/prefill_chunks", float(n))
+
+    def interleave_stall(self, seconds: float) -> None:
+        """Time active decode slots spent waiting on one prefill chunk
+        before their interleaved step ran — the per-chunk TPOT tax of
+        chunked admission (the whole-prefill stall it replaces books
+        nothing here; compare ``decode/step_s`` spikes instead)."""
+        self.reg.counter("decode/interleave_stall_s").inc(seconds)
+
     def token(self, uid: int, n: int = 1) -> None:
         tr = self._live.get(uid)
         if tr is None:
             return
+        now = clock()
         if tr.first_token_t is None:
-            tr.first_token_t = clock()
+            tr.first_token_t = now
             self.reg.observe("request/ttft_s", tr.ttft_s)
+        else:
+            # worst single stall between emissions — the TPOT *spike* an
+            # unchunked long admit causes (averages hide it)
+            tr.max_gap_s = max(tr.max_gap_s, now - tr.last_token_t)
+        tr.last_token_t = now
         tr.n_tokens += n
         self.reg.inc("tokens/generated", n)
 
@@ -494,6 +514,8 @@ class RequestTracker:
         self.reg.observe("request/tokens", tr.n_tokens)
         if tr.tpot_s is not None:
             self.reg.observe("request/tpot_s", tr.tpot_s)
+        if tr.n_tokens >= 2:
+            self.reg.observe("request/max_gap_s", tr.max_gap_s)
         self.reg.record_request(tr)
 
     def rejected(self, uid: int, code: str, reason: str = "") -> None:
@@ -530,7 +552,10 @@ def validate_metrics_snapshot(doc, require: Sequence[str] = ()) -> dict:
     gauges = doc.get("gauges", {})
     hists = doc.get("histograms", {})
     for key, v in counters.items():
-        if not isinstance(v, int) or v < 0:
+        # seconds-valued counters (e.g. decode/interleave_stall_s) are
+        # floats; monotonicity means non-negative and finite either way
+        if (not isinstance(v, (int, float)) or isinstance(v, bool)
+                or v != v or v < 0):
             raise ValueError(f"counter {key}: non-monotonic value {v!r}")
     for key, v in gauges.items():
         if not isinstance(v, (int, float)) or v != v:

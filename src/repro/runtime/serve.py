@@ -197,6 +197,72 @@ def _dequant_tree(p):
     return dequantize_tree(p, jnp.bfloat16)
 
 
+#: per-layer leaves the ring window body consumes through ``ll.qmm`` — a
+#: 2-D q4 slice of these stays packed and dispatches the fused
+#: ``kernels/q4_matmul``, so the microstep streams packed bytes instead of
+#: materializing a bf16 copy in HBM first
+_RING_QMM_KEYS = frozenset({
+    "wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down",
+    "wq_a", "wq_b", "wkv_a", "in_proj", "out_proj"})
+
+
+def dequant_ring_reference(blocks, dtype=jnp.float32):
+    """Dequantize a *stacked* ring layer bank with the same numerics the
+    window body applies at use: leaves consumed through ``ll.qmm`` keep
+    full precision (the fused kernel multiplies int4 by the scale in f32
+    without a bf16 round-trip), everything else dequantizes through bf16
+    exactly like ``_prep_ring_layer``. Reference paths (tests, oracles)
+    use this so "quantized ring == dequantized reference" stays an exact
+    contract.
+    """
+    from ..quant.grouped import QuantizedTensor, dequantize_leaf
+
+    def walk(tree):
+        if isinstance(tree, dict):
+            out = {}
+            for k, v in tree.items():
+                if isinstance(v, QuantizedTensor):
+                    keep = (k in _RING_QMM_KEYS and v.bits == 4
+                            and v.packed.ndim == 3)
+                    dq = dequantize_leaf(
+                        v, jnp.float32 if keep else jnp.bfloat16)
+                    out[k] = dq.astype(dtype)
+                else:
+                    out[k] = walk(v)
+            return out
+        return tree
+
+    return walk(blocks)
+
+
+def _prep_ring_layer(p):
+    """Prepare one sliced ring layer's params for the window body.
+
+    q4 leaves consumed via ``ll.qmm`` stay packed (dequantization happens
+    tile-by-tile in VMEM inside the fused matmul kernel); everything else
+    — einsum-consumed ``wk_b``/``wv_b``, MoE expert banks (3-D after the
+    slice), routers, the q2 demo format — dequantizes up front exactly as
+    the old whole-subtree path did. Both matmul paths accumulate f32, so
+    keeping a leaf packed does not change logits.
+    """
+    from ..quant.grouped import QuantizedTensor, dequantize_leaf
+
+    def walk(tree):
+        if isinstance(tree, dict):
+            out = {}
+            for k, v in tree.items():
+                if isinstance(v, QuantizedTensor):
+                    keep = (k in _RING_QMM_KEYS and v.bits == 4
+                            and v.packed.ndim == 2)
+                    out[k] = v if keep else dequantize_leaf(v, jnp.bfloat16)
+                else:
+                    out[k] = walk(v)
+            return out
+        return tree
+
+    return walk(p)
+
+
 def pad_vocab(params: Params, cfg: ModelConfig, tp: int) -> Params:
     """Pad embed/unembed vocab to a multiple of tp (shard_map divisibility)."""
     V = cfg.vocab
@@ -362,8 +428,8 @@ def _ring_attn_layer(cfg: ModelConfig, p, x, c, ln, *, s_start, s_len):
                                             window=eff_window,
                                             pos_offset=s_start)
     out = ll.merge_attention_stats(acc, m_, l_, "model")   # (mb, H, T, hd)
-    o = out.transpose(0, 2, 1, 3).reshape(mb, T, -1).astype(x.dtype) \
-        @ p["attn"]["wo"]
+    o = ll.qmm(out.transpose(0, 2, 1, 3).reshape(mb, T, -1).astype(x.dtype),
+               p["attn"]["wo"])
     x = x + o
     g = ll.rms_norm(x, p["ffn_norm"], cfg.norm_eps)
     if cfg.n_experts:
@@ -385,12 +451,12 @@ def _ring_mla_layer(cfg: ModelConfig, p, x, h, c, ln, pos, *, s_start,
     dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
     scale = 1.0 / math.sqrt(dn + dr)
 
-    q_lat = ll.rms_norm(h @ pa["wq_a"], pa["q_norm"], cfg.norm_eps)
-    q = (q_lat @ pa["wq_b"]).reshape(mb, T, H, dn + dr)
+    q_lat = ll.rms_norm(ll.qmm(h, pa["wq_a"]), pa["q_norm"], cfg.norm_eps)
+    q = ll.qmm(q_lat, pa["wq_b"]).reshape(mb, T, H, dn + dr)
     q_nope, q_rope = q[..., :dn], q[..., dn:]
     q_rope = ll.apply_rope(q_rope, pos, cfg.rope_theta)
 
-    kv = h @ pa["wkv_a"]
+    kv = ll.qmm(h, pa["wkv_a"])
     latent = ll.rms_norm(kv[..., :r_kv], pa["kv_norm"], cfg.norm_eps)
     k_rope = ll.apply_rope(kv[..., r_kv:][:, :, None, :], pos,
                            cfg.rope_theta)[:, :, 0]
@@ -423,7 +489,7 @@ def _ring_mla_layer(cfg: ModelConfig, p, x, h, c, ln, pos, *, s_start,
     o_lat = ll.merge_attention_stats(acc, m_, l_, "model")   # (mb, H, T, r)
     wv = pa["wv_b"].reshape(r_kv, H, dv)
     out = jnp.einsum("bhtr,rhv->bthv", o_lat.astype(x.dtype), wv)
-    o = out.reshape(mb, T, H * dv) @ pa["wo"]
+    o = ll.qmm(out.reshape(mb, T, H * dv), pa["wo"])
     x = x + o
     g = ll.rms_norm(x, p["ffn_norm"], cfg.norm_eps)
     y = ll.glu_ffn(p["ffn"], g, tp_axis="model")
@@ -443,7 +509,7 @@ def run_ring_window(cfg: ModelConfig, p_win, x, c_win, ln, *,
     w = jax.tree.leaves(p_win)[0].shape[0]
     new_caches = []
     for i in range(w):
-        p_i = _dequant_tree(jax.tree.map(lambda a: a[i], p_win))
+        p_i = _prep_ring_layer(jax.tree.map(lambda a: a[i], p_win))
         c_i = jax.tree.map(lambda a: a[i], c_win)
         if cfg.family == "ssm":
             x, nc = _ring_ssd_layer(cfg, p_i, x, c_i, ln)

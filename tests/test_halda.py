@@ -161,3 +161,60 @@ def test_solve_without_spec_has_no_report():
     sol = halda.solve(devs, small_model())
     assert sol.spec_report is None
     assert sol.candidates
+
+
+# ---------------------------------------------------------------- chunked TTFT
+
+def test_chunked_prefill_ttft_reduces_to_ttft_when_unchunked():
+    from repro.core.latency import chunked_prefill_ttft, ttft
+    devs = [linux_dev("a", 64.0, 80e9, 2.0), linux_dev("b", 64.0, 80e9, 2.0)]
+    mp = small_model()
+    w, n = [6, 6], [0, 0]
+    base = ttft(devs, mp, w, n, prompt_len=32)
+    # chunk=0 disables chunking; chunk >= prompt means a single chunk
+    assert chunked_prefill_ttft(devs, mp, w, n, 32, chunk=0) == base
+    assert chunked_prefill_ttft(devs, mp, w, n, 32, chunk=32) == base
+    assert chunked_prefill_ttft(devs, mp, w, n, 32, chunk=64) == base
+
+
+def test_chunked_prefill_ttft_charges_per_extra_chunk():
+    """TTFT_chunked = TTFT + (chunks-1) * (L/W * xi + t_step): each extra
+    chunk re-pays the per-pass window overhead plus one interleaved
+    decode step, so the penalty is linear in the chunk count."""
+    from repro.core.latency import chunked_prefill_ttft, ttft
+    devs = [linux_dev("a", 64.0, 80e9, 2.0), linux_dev("b", 64.0, 80e9, 2.0)]
+    mp = small_model()
+    w, n = [6, 6], [0, 0]
+    base = ttft(devs, mp, w, n, prompt_len=64)
+    step = 1e-3
+    t8 = chunked_prefill_ttft(devs, mp, w, n, 64, chunk=8,
+                              decode_step_s=step)    # 8 chunks
+    t16 = chunked_prefill_ttft(devs, mp, w, n, 64, chunk=16,
+                               decode_step_s=step)   # 4 chunks
+    assert base < t16 < t8
+    # per-chunk penalty is constant: (t8-base)/7 == (t16-base)/3
+    assert (t8 - base) / 7 == pytest.approx((t16 - base) / 3, rel=1e-9)
+    # with a measured step override, doubling the step adds exactly
+    # (chunks-1) * step on top
+    t8b = chunked_prefill_ttft(devs, mp, w, n, 64, chunk=8,
+                               decode_step_s=2 * step)
+    assert t8b - t8 == pytest.approx(7 * step, rel=1e-9)
+
+
+def test_chunked_prefill_crosscheck_per_step_convention():
+    """Both sides of the interleave drift term are per-step: the measured
+    total stall divides by chunks-1 so the ratio compares one decode
+    step against one observed interleave gap."""
+    from repro.core.latency import chunked_prefill_crosscheck
+    d = chunked_prefill_crosscheck(2e-3, measured_stall_s=6e-3, chunks=4)
+    assert d.term == "interleave"
+    assert d.measured_s == pytest.approx(2e-3)
+    assert d.ratio == pytest.approx(1.0)
+    assert d.consistent
+    # >10x skew (e.g. eager chunk dispatch dwarfing the decode step)
+    # falls outside the order-of-magnitude band
+    bad = chunked_prefill_crosscheck(2e-3, measured_stall_s=0.3, chunks=4)
+    assert not bad.consistent
+    # single-chunk admit has no interleave; divisor clamps to 1
+    one = chunked_prefill_crosscheck(2e-3, measured_stall_s=5e-4, chunks=1)
+    assert one.measured_s == pytest.approx(5e-4)

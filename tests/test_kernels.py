@@ -7,7 +7,9 @@ import pytest
 
 from repro.kernels import ref
 from repro.kernels.flash_decode import flash_decode, flash_verify
-from repro.kernels.paged_decode import paged_decode, paged_verify
+from repro.kernels.paged_decode import (paged_decode, paged_decode_quant,
+                                        paged_verify, paged_verify_quant)
+from repro.kernels.paged_prefill import paged_prefill
 from repro.kernels.q4_matmul import q4_matmul
 from repro.kernels.ssd_scan import ssd_scan
 from repro.quant import quantize_q4
@@ -161,6 +163,143 @@ def test_paged_verify_contiguous_table_matches_flash_verify():
     table = jnp.arange(B * nb, dtype=jnp.int32).reshape(B, nb)
     out = paged_verify(q, kp, vp, table, kv_len, interpret=True)
     want = flash_verify(q, k, v, kv_len, block_s=bs, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def _int8_pages(pages):
+    """Per-(position, kv-head) int8 quantization of float pages —
+    ``layers.quantize_kv`` convention (scale = amax/127 over D)."""
+    scale = jnp.max(jnp.abs(pages), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(pages / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+@pytest.mark.parametrize("S", [1, 4, 8])
+@pytest.mark.parametrize("B,H,hkv,D,P,bs,nb", [
+    (2, 8, 2, 64, 16, 16, 4),
+    (1, 4, 4, 128, 8, 32, 3),    # MHA
+    (3, 8, 1, 64, 32, 8, 6),     # MQA, small pages
+])
+def test_paged_prefill_sweep(S, B, H, hkv, D, P, bs, nb):
+    """Chunked-prefill flash kernel vs the gather oracle: S chunk rows
+    sit at absolute positions kv_len - S + t, tables are permuted, and
+    kv_len sweeps partial pages so dead table entries must be skipped."""
+    q = jax.random.normal(KEY, (B, S, H, D))
+    kp = jax.random.normal(jax.random.PRNGKey(2), (P, bs, hkv, D))
+    vp = jax.random.normal(jax.random.PRNGKey(3), (P, bs, hkv, D))
+    rng = np.random.default_rng(S)
+    table = jnp.asarray(rng.permutation(P)[:B * nb].reshape(B, nb)
+                        if P >= B * nb else
+                        rng.integers(0, P, (B, nb)), jnp.int32)
+    kv_len = jnp.asarray(rng.integers(S, nb * bs + 1, size=B), jnp.int32)
+    out = paged_prefill(q, kp, vp, table, kv_len, interpret=True)
+    want = ref.paged_prefill_ref(q, kp, vp, table, kv_len)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_paged_prefill_windowed_dead_page_guard():
+    """Sliding-window regression: the dead-page guard must keep pages
+    the *first* chunk row's window still reaches (its window starts at
+    kv_len - S - window, up to S - 1 positions before the last row's) —
+    cutting at kv_len - window silently zeros those contributions."""
+    B, S, H, hkv, D, P, bs, nb = 1, 4, 4, 2, 64, 8, 8, 4
+    q = jax.random.normal(KEY, (B, S, H, D))
+    kp = jax.random.normal(jax.random.PRNGKey(2), (P, bs, hkv, D))
+    vp = jax.random.normal(jax.random.PRNGKey(3), (P, bs, hkv, D))
+    table = jnp.asarray([[3, 1, 5, 0]], jnp.int32)
+    # kv_len 24, window 8: row 0 (abs pos 20) attends 13..20 — page 1
+    # (positions 8..15) ends exactly at kv_len - window, so a guard
+    # keyed on the last row drops it
+    kv_len = jnp.asarray([24], jnp.int32)
+    out = paged_prefill(q, kp, vp, table, kv_len, window=8,
+                        interpret=True)
+    want = ref.paged_prefill_ref(q, kp, vp, table, kv_len, window=8)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_paged_prefill_S1_matches_paged_decode():
+    """A one-token chunk is exactly paged decode attention."""
+    B, H, hkv, D, P, bs, nb = 2, 8, 2, 64, 16, 16, 4
+    q = jax.random.normal(KEY, (B, 1, H, D))
+    kp = jax.random.normal(jax.random.PRNGKey(2), (P, bs, hkv, D))
+    vp = jax.random.normal(jax.random.PRNGKey(3), (P, bs, hkv, D))
+    table = jnp.asarray(
+        np.random.default_rng(0).permutation(P)[:B * nb].reshape(B, nb),
+        jnp.int32)
+    kv_len = jnp.asarray([nb * bs, 21], jnp.int32)
+    out = paged_prefill(q, kp, vp, table, kv_len, interpret=True)
+    want = paged_decode(q[:, 0], kp, vp, table, kv_len, interpret=True)
+    np.testing.assert_allclose(np.asarray(out[:, 0]), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("T", [1, 3])
+@pytest.mark.parametrize("B,H,hkv,D,P,bs,nb", [
+    (2, 8, 2, 64, 16, 16, 4),
+    (1, 4, 4, 128, 8, 32, 3),    # MHA
+    (3, 8, 1, 64, 32, 8, 6),     # MQA
+])
+def test_paged_verify_quant_sweep(T, B, H, hkv, D, P, bs, nb):
+    """int8-KV paged verify with in-kernel dequant vs the
+    dequantize-then-attend oracle on the same quantized bytes."""
+    q = jax.random.normal(KEY, (B, T, H, D))
+    kp = jax.random.normal(jax.random.PRNGKey(2), (P, bs, hkv, D))
+    vp = jax.random.normal(jax.random.PRNGKey(3), (P, bs, hkv, D))
+    kq, ks = _int8_pages(kp)
+    vq, vs = _int8_pages(vp)
+    rng = np.random.default_rng(T)
+    table = jnp.asarray(rng.permutation(P)[:B * nb].reshape(B, nb)
+                        if P >= B * nb else
+                        rng.integers(0, P, (B, nb)), jnp.int32)
+    kv_len = jnp.asarray(rng.integers(T, nb * bs + 1, size=B), jnp.int32)
+    out = paged_verify_quant(q, kq, vq, ks, vs, table, kv_len,
+                             interpret=True)
+    want = ref.paged_verify_quant_ref(q, kq, vq, ks, vs, table, kv_len)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_paged_decode_quant_window_and_oracle():
+    B, H, hkv, D, P, bs, nb = 2, 8, 2, 64, 16, 16, 4
+    q = jax.random.normal(KEY, (B, H, D))
+    kp = jax.random.normal(jax.random.PRNGKey(2), (P, bs, hkv, D))
+    vp = jax.random.normal(jax.random.PRNGKey(3), (P, bs, hkv, D))
+    kq, ks = _int8_pages(kp)
+    vq, vs = _int8_pages(vp)
+    table = jnp.asarray(
+        np.random.default_rng(0).permutation(P)[:B * nb].reshape(B, nb),
+        jnp.int32)
+    kv_len = jnp.asarray([nb * bs, 17], jnp.int32)
+    for window in (None, 16):
+        out = paged_decode_quant(q, kq, vq, ks, vs, table, kv_len,
+                                 window=window, interpret=True)
+        want = ref.paged_decode_quant_ref(q, kq, vq, ks, vs, table,
+                                          kv_len, window=window)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=1e-3, atol=1e-3)
+
+
+def test_paged_verify_quant_exact_scales_recover_float():
+    """With unit scales the int8 kernel must equal the float kernel on
+    integer-valued pages — the dequant path adds no extra error."""
+    B, T, H, hkv, D, P, bs, nb = 1, 2, 4, 2, 64, 8, 16, 3
+    q = jax.random.normal(KEY, (B, T, H, D))
+    rng = np.random.default_rng(1)
+    kq = jnp.asarray(rng.integers(-127, 128, (P, bs, hkv, D)), jnp.int8)
+    vq = jnp.asarray(rng.integers(-127, 128, (P, bs, hkv, D)), jnp.int8)
+    ones = jnp.ones((P, bs, hkv), jnp.float32)
+    table = jnp.asarray(rng.permutation(P)[:B * nb].reshape(B, nb),
+                        jnp.int32)
+    kv_len = jnp.asarray([nb * bs - 5], jnp.int32)
+    out = paged_verify_quant(q, kq, vq, ones, ones, table, kv_len,
+                             interpret=True)
+    want = paged_verify(q, kq.astype(jnp.float32),
+                        vq.astype(jnp.float32), table, kv_len,
+                        interpret=True)
     np.testing.assert_allclose(np.asarray(out), np.asarray(want),
                                rtol=1e-5, atol=1e-5)
 

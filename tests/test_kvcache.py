@@ -364,7 +364,7 @@ def test_paged_cache_rejects_oversized_request():
         kv.close()
 
 
-def test_paged_cache_rejects_int8_kv_and_recurrent_families():
+def test_paged_cache_rejects_recurrent_and_int8_mla():
     import dataclasses
 
     from repro.configs import get_config
@@ -373,7 +373,17 @@ def test_paged_cache_rejects_int8_kv_and_recurrent_families():
     ssm = get_config("mamba2-780m").reduced()
     with pytest.raises(ValueError, match="unsupported for family"):
         PagedKVCache(ssm, batch=1, ctx=32, n_pages=8)
+    # dense int8 KV is supported: quantized k/v leaves plus per-(pos,
+    # kv-head) scale leaves, read by the fused paged kernels
     q = get_config("qwen2.5-14b").reduced()
     q8 = dataclasses.replace(q, kv_dtype="int8")
+    kv = PagedKVCache(q8, batch=1, ctx=32, n_pages=8)
+    cache = kv.init_cache()
+    assert set(cache["pages"]) == {"k", "v", "k_scale", "v_scale"}
+    assert cache["pages"]["k"].dtype == jnp.int8
+    assert cache["pages"]["k_scale"].dtype != jnp.int8
+    # the MLA latent is already compressed — int8 on top stays rejected
+    mla = get_config("minicpm3-4b").reduced()
+    mla8 = dataclasses.replace(mla, kv_dtype="int8")
     with pytest.raises(NotImplementedError):
-        PagedKVCache(q8, batch=1, ctx=32, n_pages=8)
+        PagedKVCache(mla8, batch=1, ctx=32, n_pages=8)

@@ -220,6 +220,34 @@ def test_request_log_bounded_with_eviction_counter():
     assert reg.snapshot()["request_log"] == {"logged": 4, "evicted": 3}
 
 
+def test_tracker_chunked_prefill_metrics():
+    """Chunked-admission instrumentation: per-request chunk counts land
+    in the ``request/prefill_chunks`` histogram, interleave stalls
+    accumulate as a counter, and the worst inter-token gap is recorded
+    per finished request (the stat the chunked-admit TPOT gate reads)."""
+    import time
+
+    reg = MetricsRegistry()
+    tr = RequestTracker(reg)
+    tr.submit(1)
+    tr.admitted(1)
+    tr.prefill_chunks(1, 4)
+    tr.interleave_stall(0.25)
+    tr.interleave_stall(0.5)
+    tr.token(1)
+    time.sleep(0.02)
+    tr.token(1)
+    tr.token(1)
+    tr.finished(1)
+    snap = reg.snapshot()
+    assert snap["counters"]["decode/interleave_stall_s"] == \
+        pytest.approx(0.75)
+    assert reg.histogram("request/prefill_chunks").quantile(0.5) >= 4
+    trace = list(reg.request_log)[-1]
+    assert trace.max_gap_s >= 0.02           # the slept gap was captured
+    assert reg.histogram("request/max_gap_s").count == 1
+
+
 def test_tracker_reject_classification_counts():
     reg = MetricsRegistry()
     tr = RequestTracker(reg)

@@ -304,6 +304,112 @@ def test_paged_engine_defers_admit_under_transient_pressure():
         kv.close()
 
 
+# --------------------------------------------------------------------------- #
+#  chunked admission (page-sized prefill chunks interleaved with decode)
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("arch", ["qwen2.5-14b", "phi3.5-moe-42b-a6.6b"])
+def test_chunked_admission_byte_identical(arch):
+    """Prompts admitted in page-sized chunks (written straight into the
+    block pool, interleaved with decode steps) must stream the exact
+    bytes of the dense engine — first token included."""
+    cfg = _small(arch)
+    params = init_params(cfg, KEY)
+    B, ctx = 2, 64
+    rng = np.random.default_rng(3)
+    reqs = [_Req(i, rng.integers(0, cfg.vocab, int(rng.integers(4, 30))),
+                 5) for i in range(5)]
+
+    fin_d, _ = _dense_engine(cfg, params, B, ctx).run(
+        init_cache(cfg, B, ctx, dtype=jnp.float32), reqs)
+    eng, kv = make_paged_engine(params, cfg, B, ctx, n_pages=32,
+                                page_tokens=8, prefill_chunk=8)
+    try:
+        fin_p, _ = eng.run(kv.init_cache(), reqs)
+        assert {f.uid: f.tokens for f in fin_d} == \
+            {f.uid: f.tokens for f in fin_p}
+        kv.pool.check()
+        assert kv.pool.n_active == 0
+    finally:
+        kv.close()
+
+
+def test_chunked_admission_prefix_share_and_cow():
+    """Pages written by a chunked admit are content-addressed like any
+    other: an identical prompt reuses them across chunk boundaries
+    (2 full + 1 partial page hit -> the whole prompt is a prefix hit,
+    which exercises the write-free logits replay) and diverges via
+    copy-on-write at the first generated token."""
+    cfg = _small("qwen2.5-14b")
+    params = init_params(cfg, KEY)
+    B, ctx = 2, 64
+    prompt = np.random.default_rng(4).integers(0, cfg.vocab, 19)
+    eng, kv = make_paged_engine(params, cfg, B, ctx, n_pages=32,
+                                page_tokens=8, prefill_chunk=8)
+    try:
+        fin, _ = eng.run(kv.init_cache(),
+                         [_Req(0, prompt, 5), _Req(1, prompt.copy(), 5)])
+        by = {f.uid: f.tokens for f in fin}
+        assert by[0] == by[1]
+        st = kv.stats()
+        assert st.prefix_hits == 3            # same sharing as unchunked
+        assert st.cow_copies >= 1             # divergence page cloned
+        kv.pool.check()
+    finally:
+        kv.close()
+
+
+def test_chunked_admission_partial_prefix_resumes_mid_prompt():
+    """A shared 16-token prefix skips its pages and chunking resumes at
+    the divergence offset — streams still match the dense engine."""
+    cfg = _small("qwen2.5-14b")
+    params = init_params(cfg, KEY)
+    B, ctx = 2, 64
+    rng = np.random.default_rng(8)
+    head = rng.integers(0, cfg.vocab, 16)
+    reqs = [_Req(0, np.concatenate([head, rng.integers(0, cfg.vocab, 7)]),
+                 5),
+            _Req(1, np.concatenate([head, rng.integers(0, cfg.vocab, 9)]),
+                 5)]
+
+    fin_d, _ = _dense_engine(cfg, params, B, ctx).run(
+        init_cache(cfg, B, ctx, dtype=jnp.float32), reqs)
+    eng, kv = make_paged_engine(params, cfg, B, ctx, n_pages=32,
+                                page_tokens=8, prefill_chunk=8)
+    try:
+        fin_p, _ = eng.run(kv.init_cache(), reqs)
+        assert {f.uid: f.tokens for f in fin_d} == \
+            {f.uid: f.tokens for f in fin_p}
+        assert kv.stats().prefix_hits >= 2    # the two full head pages
+        kv.pool.check()
+    finally:
+        kv.close()
+
+
+def test_chunked_admission_int8_pages_match_dense_int8():
+    """int8 KV pages under chunked admission: the page round-trip
+    quantizes per (token, kv-head) exactly like the dense int8 cache, so
+    chunked greedy streams stay byte-identical to dense int8."""
+    cfg = dataclasses.replace(_small("qwen2.5-14b"), kv_dtype="int8")
+    params = init_params(cfg, KEY)
+    B, ctx = 2, 64
+    rng = np.random.default_rng(3)
+    reqs = [_Req(i, rng.integers(0, cfg.vocab, int(rng.integers(4, 30))),
+                 5) for i in range(5)]
+
+    fin_d, _ = _dense_engine(cfg, params, B, ctx).run(
+        init_cache(cfg, B, ctx, dtype=jnp.float32), reqs)
+    eng, kv = make_paged_engine(params, cfg, B, ctx, n_pages=32,
+                                page_tokens=8, prefill_chunk=8)
+    try:
+        fin_p, _ = eng.run(kv.init_cache(), reqs)
+        assert {f.uid: f.tokens for f in fin_d} == \
+            {f.uid: f.tokens for f in fin_p}
+        kv.pool.check()
+    finally:
+        kv.close()
+
+
 def test_paged_engine_rejects_only_on_exhaustion():
     cfg = _small("qwen2.5-14b")
     params = init_params(cfg, KEY)

@@ -25,12 +25,12 @@ def test_ring_q4_matches_dequantized_reference(arch):
     mesh = jax.make_mesh((4, 2), ("data", "model"))
     toks = jax.random.randint(key, (B, 4), 0, cfg.vocab)
 
-    # reference: plain decode with dequantized weights
+    # reference: plain decode with dequantized weights (same numerics
+    # policy as the ring window body — qmm-consumed leaves f32, rest bf16)
     pq, skipped = serve.quantize_ring_params(dict(params), cfg, tp=2)
     assert skipped == []
     pd = dict(pq)
-    pd["blocks"] = jax.tree.map(lambda a: a.astype(jnp.float32),
-                                serve._dequant_tree(pq["blocks"]))
+    pd["blocks"] = serve.dequant_ring_reference(pq["blocks"])
     cache_ref = init_cache(cfg, B, Smax, dtype=jnp.float32)
     refs = []
     for t in range(3):
@@ -67,6 +67,47 @@ def test_quantize_ring_params_selective():
         kinds[name.split("'")[-2]] = isinstance(leaf, QuantizedTensor)
     assert kinds["wq"] and kinds["w_down"]
     assert not kinds["attn_norm"] and not kinds["bq"]
+
+
+def test_prep_ring_layer_keeps_q4_packed_for_qmm():
+    """The ring microstep must hand q4 matmul weights to ``ll.qmm`` still
+    packed (fused dequant-matmul streams the int4 bytes; a bf16
+    materialization would forfeit the 0.27x ring traffic) while
+    non-matmul leaves (norms, biases, routers) dequantize up front."""
+    from repro.quant.grouped import QuantizedTensor
+
+    cfg = dataclasses.replace(get_config("qwen2.5-14b").reduced(),
+                              n_layers=4)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    pq, skipped = serve.quantize_ring_params(dict(params), cfg, tp=2)
+    assert skipped == []
+
+    # slice layer 0 out of the stacked banks (member-wise for packed)
+    def slice0(leaf):
+        if isinstance(leaf, QuantizedTensor):
+            return QuantizedTensor(packed=leaf.packed[0],
+                                   scale=leaf.scale[0], bits=leaf.bits,
+                                   group=leaf.group, shape=leaf.shape[1:])
+        return leaf[0]
+    layer0 = jax.tree.map(
+        slice0, pq["blocks"],
+        is_leaf=lambda x: isinstance(x, QuantizedTensor))
+    prepped = serve._prep_ring_layer(layer0)
+
+    def walk(tree, out, prefix=""):
+        for k, v in tree.items():
+            if isinstance(v, dict):
+                walk(v, out, k)
+            else:
+                out[k] = v
+        return out
+    leaves = walk(prepped, {})
+    for k in ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down"):
+        assert isinstance(leaves[k], QuantizedTensor), k
+        assert leaves[k].packed.dtype == jnp.int8   # packed int4 pairs
+    # norms/biases were never quantized and pass through as plain arrays
+    assert not isinstance(leaves["attn_norm"], QuantizedTensor)
+    assert not isinstance(leaves["bq"], QuantizedTensor)
 
 
 def test_quantize_ring_params_reports_skipped():

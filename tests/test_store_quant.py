@@ -212,8 +212,7 @@ def test_ring_stream_quantized_store(store_dir):
     pq, skipped = serve.quantize_ring_params(dict(params), cfg, tp=2)
     assert skipped == []
     pd = dict(pq)
-    pd["blocks"] = jax.tree.map(lambda a: a.astype(jnp.float32),
-                                serve._dequant_tree(pq["blocks"]))
+    pd["blocks"] = serve.dequant_ring_reference(pq["blocks"])
 
     B, Smax, steps = 8, 32, 3
     toks = jax.random.randint(KEY, (B, steps), 0, cfg.vocab)
